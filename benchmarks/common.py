@@ -1,0 +1,61 @@
+"""Shared benchmark helpers: cached synthetic census + covering, timing."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import numpy as np
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "cache")
+
+# Benchmark-scale map: 16 states / 128 counties / 3,072 block groups.
+SCALE = dict(seed=0, n_states=16, counties_per_state=8, blocks_per_county=24)
+
+
+def get_census():
+    from repro.core.synth import build_synth_census
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, "census.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    sc = build_synth_census(**SCALE)
+    with open(path, "wb") as f:
+        pickle.dump(sc, f)
+    return sc
+
+
+def get_covering(max_level: int = 9):
+    from repro.core.cells import build_cell_covering
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"covering_L{max_level}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    cov = build_cell_covering(get_census().census, max_level=max_level)
+    with open(path, "wb") as f:
+        pickle.dump(cov, f)
+    return cov
+
+
+def sample_points(n: int, seed: int = 7):
+    return get_census().sample_points(np.random.default_rng(seed), n)
+
+
+def timeit(fn, *args, repeats: int = 3):
+    """Median wall time of fn(*args) after one warm-up (compile) call."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Geo-engine perf hillclimb harness: stage-level wall-clock breakdown of
+the fast approach on CPU (the paper-representative cell of §Perf).
+
+    PYTHONPATH=src python -m benchmarks.geo_perf
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.fast import FastConfig, FastIndex, assign_fast, \
+    leaf_codes, locate_cells
+
+
+def t(fn, *a, r=5):
+    out = fn(*a)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(r):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main():
+    census = common.get_census().census
+    cov = common.get_covering(9)
+    n = 1_000_000
+    xy, bid, *_ = common.sample_points(n)
+    pts = jnp.asarray(xy)
+    print(f"n={n} points, {len(cov.lo)} cells")
+
+    for gbits in (0, 4, 6):
+        idx = FastIndex.from_covering(cov, census, gbits=gbits)
+        dt_codes = t(jax.jit(lambda p: leaf_codes(idx, p)), pts)
+        codes = leaf_codes(idx, pts)
+        dt_locate = t(jax.jit(lambda c: locate_cells(idx, c)), codes)
+        for mode in ("approx", "exact"):
+            cfg = FastConfig(mode=mode, cap_boundary=0.25)
+            f = jax.jit(lambda p: assign_fast(idx, p, cfg)[2])
+            dt_full = t(f, pts)
+            acc = float(np.mean(np.asarray(f(pts)) == bid))
+            print(f"G{gbits} {mode:6s}: full {dt_full*1e3:7.1f}ms "
+                  f"({n/dt_full/1e6:5.2f}M pts/s) | codes "
+                  f"{dt_codes*1e3:5.1f}ms locate {dt_locate*1e3:6.1f}ms "
+                  f"(iters={idx.search_iters}) | acc {acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

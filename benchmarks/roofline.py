@@ -1,0 +1,145 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline results/dryrun.json
+
+Per (arch x shape x mesh) cell, derive the three roofline terms (seconds):
+
+  compute    = HLO_FLOPs_per_device / 197e12          (TPU v5e bf16 peak)
+  memory     = HLO_bytes_per_device / 819e9           (HBM bandwidth)
+  collective = collective_result_bytes_per_device / 50e9   (per-link ICI)
+
+Convention: collective bytes are the *result shapes* of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops in the
+partitioned HLO — a per-device proxy for link traffic that is consistent
+across baselines (ring factors ~2(N-1)/N are absorbed into the constant).
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (prefill/decode) with N = active
+params (MoE counts shared + top-k routed only).  The "roofline fraction" is
+useful-compute-time / bottleneck-term — the score we hillclimb in §Perf.
+"""
+import argparse
+import json
+import sys
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+sys.path.insert(0, "src")
+
+
+def active_params(arch: str, total: int) -> int:
+    """Active params per token: subtract un-routed expert weights."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if not cfg.n_experts:
+        return total
+    expert_p = 3 * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    routed_total = cfg.n_experts * expert_p * n_moe_layers
+    routed_active = cfg.top_k * expert_p * n_moe_layers
+    return total - routed_total + routed_active
+
+
+def analyze(rec: dict) -> dict:
+    arch, shape, kind = rec["arch"], rec["shape"], rec["kind"]
+    n_dev = rec["n_devices"]
+    comp = rec["flops_per_device"] / PEAK_FLOPS
+    mem = rec["bytes_accessed_per_device"] / HBM_BW
+    coll_bytes = sum(rec["collective_bytes_per_device"].values())
+    coll = coll_bytes / ICI_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dominant = max(terms, key=terms.get)
+
+    n_act = active_params(arch, rec["params"])
+    b, s = rec["shape_batch_seq"] if "shape_batch_seq" in rec else (None,
+                                                                   None)
+    from repro.configs.base import ALL_SHAPES
+    sh = {x.name: x for x in ALL_SHAPES}[shape]
+    if kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 6 * n_act * tokens
+    elif kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        model_flops = 2 * n_act * tokens
+    else:
+        tokens = sh.global_batch          # one new token per sequence
+        model_flops = 2 * n_act * tokens
+    mf_dev = model_flops / n_dev
+    useful = mf_dev / PEAK_FLOPS
+    bottleneck_t = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh_name"],
+        "kind": kind,
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf_dev,
+        "hlo_flops_per_dev": rec["flops_per_device"],
+        "useful_flop_ratio": (mf_dev / rec["flops_per_device"]
+                              if rec["flops_per_device"] else 0.0),
+        "roofline_fraction": useful / bottleneck_t if bottleneck_t else 0.0,
+        "temp_gib": rec["memory"]["temp_size"] / 2**30,
+        "args_gib": rec["memory"]["argument_size"] / 2**30,
+    }
+
+
+def improvement_hint(a: dict) -> str:
+    if a["dominant"] == "compute":
+        if a["useful_flop_ratio"] < 0.5:
+            return ("cut non-model FLOPs (remat recompute, causal-masked "
+                    "waste, replicated head compute)")
+        return "compute-bound near useful flops; raise MXU util via tiling"
+    if a["dominant"] == "memory":
+        return ("cut HBM traffic: fuse/bf16 intermediates, larger attention "
+                "chunks, avoid logit materialization")
+    return "reduce collective volume: reshard weights, overlap, or cast " \
+           "all-gathers to bf16"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="results/dryrun.json")
+    ap.add_argument("--mesh", default=None,
+                    choices=(None, "single_pod", "multi_pod"))
+    ap.add_argument("--json-out", default="results/roofline.json")
+    args = ap.parse_args()
+    recs = json.load(open(args.path))
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        if args.mesh and r["mesh_name"] != args.mesh:
+            continue
+        rows.append(analyze(r))
+    rows.sort(key=lambda a: (a["mesh"], a["arch"], a["shape"]))
+
+    hdr = (f"| arch | shape | mesh | compute(s) | memory(s) | coll(s) | "
+           f"dominant | useful/HLO | roofline frac | temp GiB |")
+    print(hdr)
+    print("|" + "---|" * 10)
+    for a in rows:
+        print(f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+              f"| {a['compute_s']:.3e} | {a['memory_s']:.3e} "
+              f"| {a['collective_s']:.3e} | **{a['dominant']}** "
+              f"| {a['useful_flop_ratio']:.2f} "
+              f"| {a['roofline_fraction']:.3f} | {a['temp_gib']:.1f} |")
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {args.json_out}")
+    # Hillclimb-candidate summary (single-pod train/prefill cells).
+    sp = [a for a in rows if a["mesh"] == "single_pod"]
+    if sp:
+        worst = min(sp, key=lambda a: a["roofline_fraction"])
+        coll = max(sp, key=lambda a: a["collective_s"]
+                   / max(max(a["compute_s"], a["memory_s"]), 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_fraction']:.3f}, "
+              f"{worst['dominant']}-bound) -> {improvement_hint(worst)}")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']} "
+              f"(coll/max(other)="
+              f"{coll['collective_s']/max(max(coll['compute_s'], coll['memory_s']), 1e-12):.2f})"
+              f" -> {improvement_hint(coll)}")
+
+
+if __name__ == "__main__":
+    main()

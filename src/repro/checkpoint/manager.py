@@ -1,0 +1,119 @@
+"""Async, atomically-committed, mesh-agnostic checkpointing.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json, committed via tmp-dir
+rename (a partially-written checkpoint is never visible).  Arrays are saved
+as *global* host arrays keyed by pytree path, so a restore can re-place
+them onto ANY mesh/sharding — this is what makes elastic re-scaling a
+restore-with-new-shardings, not a format migration.
+
+Async mode snapshots to host in the caller, then writes on a background
+thread; ``wait()`` drains.  ``keep`` bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra_meta: Optional[dict] = None):
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        meta = {"step": int(step), "keys": sorted(host.keys())}
+        meta.update(extra_meta or {})
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)       # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Restore into the structure of ``like_tree``; if ``shardings``
+        (a matching pytree of NamedSharding) is given, arrays are placed
+        directly onto the (possibly different) mesh — elastic re-scaling."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            host = {k: z[k] for k in z.files}
+        flat_like = _flatten(like_tree)
+        assert set(flat_like) == set(host), (
+            sorted(set(flat_like) ^ set(host))[:5])
+        leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path_)
+                for path_, _ in
+                jax.tree_util.tree_flatten_with_path(like_tree)[0]]
+        arrays = [host[k] for k in keys]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_flatten(shardings)[0]
+            arrays = [jax.device_put(a, s)
+                      for a, s in zip(arrays, sh_leaves)]
+        else:
+            arrays = [jax.device_put(np.asarray(a)) for a in arrays]
+        return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    def meta(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "meta.json")
+        with open(path) as f:
+            return json.load(f)

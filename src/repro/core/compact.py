@@ -1,0 +1,23 @@
+"""O(N) stable compaction (cumsum + scatter) replacing argsort.
+
+``compact_indices(mask, cap)`` returns (idx [cap], valid [cap]): the first
+``cap`` indices where mask is True, in order, plus a validity mask for
+unfilled slots.  An argsort-based compaction is O(N log N) and measured as
+the dominant cost of the exact fast path (§Perf geo iteration 4); prefix
+sums make it O(N).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_indices(mask: jnp.ndarray, cap: int):
+    n = mask.shape[0]
+    k = mask.astype(jnp.int32)
+    pos = jnp.cumsum(k) - 1                       # slot among True entries
+    dest = jnp.where(mask, pos, cap)              # False -> dropped sentinel
+    idx = jnp.zeros((cap + 1,), jnp.int32).at[jnp.minimum(dest, cap)].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")[:cap]
+    total = jnp.sum(k)
+    valid = jnp.arange(cap, dtype=jnp.int32) < total
+    return idx, valid

@@ -1,0 +1,198 @@
+"""Distributed geo-index lookup (beyond-paper; DESIGN.md §2 last row).
+
+The paper's approximate index hits ~90 GiB on a single node (Table I).  On
+TPU we remove that wall by sharding the cell table by contiguous Morton
+ranges across the "model" axis while points stay batch-sharded across
+("pod","data") — the same activation/weight split as the MoE layer:
+
+  * every model-rank holds its Morton slice of (cell_lo, cell_hi, val,
+    cand) — 1/16th of the index per chip on the production mesh;
+  * points are replicated over "model" (they are only batch-sharded), so
+    each rank resolves the points whose leaf code falls in its range — no
+    payload all_to_all at all, only an i32 ``pmax`` per point to combine;
+  * the PIP fallback for boundary points runs on the owning rank with a
+    fixed-capacity compaction, so exact-mode compute is also sharded.
+
+``shard_covering`` splits a host-side CellCovering into equal-cell padded
+slices; ``assign_fast_distributed`` is the shard_map lookup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+from repro.core.cells import CellCovering
+from repro.core.fast import FastConfig, FastIndex, leaf_codes, morton
+from repro.core.geometry import CensusMap
+from repro.kernels import ops
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedFastIndex:
+    """Morton-range-sharded cell index. Arrays are stacked [n_shards, ...]
+    and sharded on axis 0 over "model"."""
+
+    cell_lo: Any       # [S, Lmax] i32 (padded with INT32_MAX)
+    cell_hi: Any       # [S, Lmax] i32
+    cell_val: Any      # [S, Lmax] i32
+    cand: Any          # [S, Cmax, K] i32
+    range_lo: Any      # [S] i32 — first leaf code owned by each shard
+    block_edges: Any   # [Nb, Eb, 4] f32 (replicated; small vs the index)
+    block_parent: Any  # [Nb] i32
+    county_parent: Any # [Nc] i32
+    quant: Any         # [4] f32
+    max_level: int = dataclasses.field(metadata=dict(static=True), default=9)
+    n_shards: int = dataclasses.field(metadata=dict(static=True), default=16)
+
+    def tree_flatten(self):
+        leaves = (self.cell_lo, self.cell_hi, self.cell_val, self.cand,
+                  self.range_lo, self.block_edges, self.block_parent,
+                  self.county_parent, self.quant)
+        return leaves, (self.max_level, self.n_shards)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, max_level=aux[0], n_shards=aux[1])
+
+    def index_bytes_per_shard(self) -> int:
+        per = (np.asarray(self.cell_lo).nbytes
+               + np.asarray(self.cell_hi).nbytes
+               + np.asarray(self.cell_val).nbytes
+               + np.asarray(self.cand).nbytes)
+        return per // self.n_shards
+
+
+INT_MAX = np.int32(2**31 - 1)
+
+
+def shard_covering(cov: CellCovering, census: CensusMap,
+                   n_shards: int) -> ShardedFastIndex:
+    """Split the covering into ``n_shards`` contiguous Morton slices with
+    (approximately) equal cell counts, padded to a common length."""
+    n = len(cov.lo)
+    bounds = [int(round(i * n / n_shards)) for i in range(n_shards + 1)]
+    lmax = max(bounds[i + 1] - bounds[i] for i in range(n_shards))
+    cmax = 0
+    rows = []
+    for i in range(n_shards):
+        a, b = bounds[i], bounds[i + 1]
+        val = cov.val[a:b]
+        brow = -(val[val < 0] + 1)
+        cmax = max(cmax, len(brow))
+        rows.append((a, b))
+
+    cell_lo = np.full((n_shards, lmax), INT_MAX, np.int32)
+    cell_hi = np.full((n_shards, lmax), -1, np.int32)
+    cell_val = np.full((n_shards, lmax), -1, np.int32)
+    cand = np.full((n_shards, max(cmax, 1), cov.cand.shape[1]), -1, np.int32)
+    range_lo = np.zeros((n_shards,), np.int32)
+    for i, (a, b) in enumerate(rows):
+        m = b - a
+        cell_lo[i, :m] = cov.lo[a:b]
+        cell_hi[i, :m] = cov.hi[a:b]
+        val = cov.val[a:b].copy()
+        # Re-base boundary candidate rows into this shard's local table.
+        is_b = val < 0
+        src_rows = -(val[is_b] + 1)
+        local = np.arange(is_b.sum(), dtype=np.int32)
+        cand[i, :len(local)] = cov.cand[src_rows]
+        val[is_b] = -(local + 1)
+        cell_val[i, :m] = val
+        range_lo[i] = cov.lo[a]
+    range_lo[0] = 0
+
+    x0, x1, y0, y1 = cov.extent
+    nn = 1 << cov.max_level
+    quant = np.array([x0, y0, nn / (x1 - x0), nn / (y1 - y0)], np.float32)
+    return ShardedFastIndex(
+        cell_lo=jnp.asarray(cell_lo), cell_hi=jnp.asarray(cell_hi),
+        cell_val=jnp.asarray(cell_val), cand=jnp.asarray(cand),
+        range_lo=jnp.asarray(range_lo),
+        block_edges=jnp.asarray(ops.edges_from_soup_np(census.blocks.verts)),
+        block_parent=jnp.asarray(census.blocks.parent),
+        county_parent=jnp.asarray(census.counties.parent),
+        quant=jnp.asarray(quant),
+        max_level=cov.max_level, n_shards=n_shards)
+
+
+def _local_lookup(idx: ShardedFastIndex, lo, hi, val, cand, codes, points,
+                  mode: str, cap: int, backend):
+    """Lookup of ``codes`` against ONE shard's table (padded rows inert)."""
+    pos = jnp.searchsorted(lo, codes, side="right") - 1
+    pos = jnp.clip(pos, 0, lo.shape[0] - 1)
+    found = (lo[pos] <= codes) & (codes <= hi[pos])
+    v = jnp.where(found, val[pos], -INT_MAX)
+    bid = jnp.where(v >= 0, v, -1)
+    is_b = found & (v < 0) & (v > -INT_MAX)
+    brow = jnp.clip(-(v + 1), 0, cand.shape[0] - 1)
+    n_pip = jnp.zeros((), jnp.int32)
+    if mode == "approx":
+        bid = jnp.where(is_b, cand[brow, 0], bid)
+    else:
+        order = jnp.argsort(jnp.where(is_b, 0, 1), stable=True)
+        sub = order[:cap]
+        sub_pts = points[sub]
+        sub_need = is_b[sub]
+        sub_cands = cand[brow[sub]]
+        assign = jnp.full(cap, -1, jnp.int32)
+        for k in range(cand.shape[1]):
+            pid = sub_cands[:, k]
+            active = sub_need & (pid >= 0) & (assign < 0)
+            edges = idx.block_edges[jnp.clip(pid, 0, None)]
+            inside = ops.pip_gathered(sub_pts, edges, backend=backend)
+            assign = jnp.where(active & inside, pid, assign)
+            n_pip = n_pip + jnp.sum(active.astype(jnp.int32))
+        fallback = jnp.where(sub_cands[:, 0] >= 0, sub_cands[:, 0], -1)
+        newv = jnp.where(sub_need,
+                         jnp.where(assign >= 0, assign, fallback), bid[sub])
+        bid = bid.at[sub].set(newv)
+    return bid, n_pip
+
+
+def assign_fast_distributed(idx: ShardedFastIndex, points: jnp.ndarray,
+                            mesh, cfg: FastConfig = FastConfig()):
+    """Sharded-index lookup under shard_map.  points [N, 2] batch-sharded
+    over ("pod","data"); index sharded over "model".  Returns
+    (sid, cid, bid, stats) exactly like assign_fast."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    n = points.shape[0]
+    n_loc = n // dp_size
+    cap = max(256, int(n_loc * cfg.cap_boundary) // 256 * 256)
+    cap = min(cap, n_loc)
+
+    # Mirror of FastIndex.leaf_codes on the quant params.
+    fake = FastIndex(cell_lo=None, cell_hi=None, cell_val=None, cand=None,
+                     top_start=None, block_edges=None, block_parent=None,
+                     county_parent=None, quant=idx.quant,
+                     max_level=idx.max_level, gbits=0)
+
+    def body(points_loc, lo, hi, val, cand, range_lo):
+        lo, hi, val, cand = lo[0], hi[0], val[0], cand[0]
+        codes = leaf_codes(fake, points_loc)
+        bid, n_pip = _local_lookup(idx, lo, hi, val, cand, codes,
+                                   points_loc, cfg.mode, cap, cfg.backend)
+        # Each point is owned by exactly one shard -> pmax combines.
+        bid = jax.lax.pmax(bid, "model")
+        n_pip = jax.lax.psum(n_pip, "model")
+        if dp:
+            n_pip = jax.lax.psum(n_pip, dp)
+        return bid, n_pip
+
+    bspec = dp if dp else None
+    bid, n_pip = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(PS(bspec, None), PS("model", None), PS("model", None),
+                  PS("model", None), PS("model", None, None), PS("model")),
+        out_specs=(PS(bspec), PS()),
+    )(points, idx.cell_lo, idx.cell_hi, idx.cell_val, idx.cand,
+      idx.range_lo)
+    cid = jnp.where(bid >= 0, idx.block_parent[jnp.clip(bid, 0, None)], -1)
+    sid = jnp.where(cid >= 0, idx.county_parent[jnp.clip(cid, 0, None)], -1)
+    return sid, cid, bid, {"n_pip": n_pip}

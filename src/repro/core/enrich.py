@@ -1,0 +1,31 @@
+"""Geo enrichment operator: the paper's technique as a pipeline stage.
+
+``enrich(index, cfg, xy, *, n_feature_tokens)`` maps a batch of (lon, lat)
+locations onto census blocks with the fast index and returns
+(block_id, county_id, state_id, feature_token) — jit-able, shardable on the
+batch axis, and cheap enough to fuse into a host->device prefetch stage.
+
+This is where "projecting billions of locations onto census polygons"
+(paper §I) meets the training framework: demographic features join the
+token stream at data-pipeline rate, not in a separate offline job.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fast import FastConfig, FastIndex, assign_fast
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_feature_tokens"))
+def enrich(index: FastIndex, xy: jnp.ndarray,
+           cfg: FastConfig = FastConfig(),
+           n_feature_tokens: int = 1024):
+    """xy [N, 2] (lon, lat) -> dict of per-point census features."""
+    sid, cid, bid, stats = assign_fast(index, xy, cfg)
+    feature = (jnp.maximum(bid, 0) % n_feature_tokens).astype(jnp.int32)
+    feature = jnp.where(bid >= 0, feature, n_feature_tokens)  # OOV bucket
+    return {"state": sid, "county": cid, "block": bid,
+            "feature_token": feature, "stats": stats}

@@ -1,0 +1,240 @@
+"""Device-side "fast" approach (paper §IV): true-hit-filter cell lookup.
+
+Lookup pipeline per point (all vectorized, jit-able):
+
+  1. fixed-point quantize (lon, lat) -> (ix, iy) on the 2^L grid and Morton-
+     interleave to a leaf code (int32 bit arithmetic — the TPU analogue of
+     S2 cell ids);
+  2. locate the covering cell: top-grid bucket (direct-indexed first 2g bits
+     — the radix-trie-fanout analogue; g=0 disables) then a fixed-iteration
+     binary search over the sorted interval starts;
+  3. interior cell  -> block id, done (paper's "true hit": zero PIP tests);
+     boundary cell  -> exact mode: crossing-number kernel against <=K
+     candidates (compacted to a static buffer);
+                       approx mode: accept the centre-owner candidate —
+     error bounded by the leaf cell diagonal (paper's precision guarantee).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cells import CellCovering
+from repro.core.compact import compact_indices
+from repro.core.geometry import CensusMap
+from repro.kernels import ops
+
+
+def part1by1(x: jnp.ndarray) -> jnp.ndarray:
+    x = x & 0x0000FFFF
+    x = (x | (x << 8)) & 0x00FF00FF
+    x = (x | (x << 4)) & 0x0F0F0F0F
+    x = (x | (x << 2)) & 0x33333333
+    x = (x | (x << 1)) & 0x55555555
+    return x
+
+
+def morton(ix: jnp.ndarray, iy: jnp.ndarray) -> jnp.ndarray:
+    return (part1by1(iy) << 1) | part1by1(ix)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FastIndex:
+    """Device-resident cell index (+ block geometry for exact fallback)."""
+
+    cell_lo: Any        # [n_cells] i32 sorted
+    cell_hi: Any        # [n_cells] i32 inclusive ends (gaps = outside map)
+    cell_val: Any       # [n_cells] i32
+    cand: Any           # [n_boundary, K] i32
+    top_start: Any      # [4^g + 1] i32 — bucket ranges into cell_lo
+    block_edges: Any    # [Nb, Eb, 4] f32 — exact-mode PIP fallback
+    block_parent: Any   # [Nb] i32
+    county_parent: Any  # [Nc] i32
+    quant: Any          # [4] f32: (x0, y0, sx, sy) with s = 2^L / extent
+    # -- static --
+    max_level: int = dataclasses.field(metadata=dict(static=True), default=9)
+    gbits: int = dataclasses.field(metadata=dict(static=True), default=0)
+    search_iters: int = dataclasses.field(metadata=dict(static=True),
+                                          default=32)
+
+    def tree_flatten(self):
+        leaves = (self.cell_lo, self.cell_hi, self.cell_val, self.cand,
+                  self.top_start, self.block_edges, self.block_parent,
+                  self.county_parent, self.quant)
+        return leaves, (self.max_level, self.gbits, self.search_iters)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, max_level=aux[0], gbits=aux[1],
+                   search_iters=aux[2])
+
+    def nbytes(self) -> int:
+        return sum(int(np.asarray(a).nbytes)
+                   for a in (self.cell_lo, self.cell_hi, self.cell_val,
+                             self.cand, self.top_start))
+
+    @classmethod
+    def from_covering(cls, cov: CellCovering, census: CensusMap,
+                      gbits: int = 4):
+        """gbits = quadtree levels resolved by the direct-indexed top grid
+        (the paper's F1/F2/F4 trie-fanout analogue; 2*gbits key bits)."""
+        assert gbits <= cov.max_level
+        nb = 1 << (2 * gbits)
+        shift = 2 * (cov.max_level - gbits)
+        # Bucket b covers leaf codes [b << shift, (b+1) << shift).  A covering
+        # cell larger than a bucket spans several buckets; searchsorted-right
+        # on lo gives, for each bucket start, the first cell *after* it, so
+        # search ranges [start[b]-1, start[b+1]) — we fold the -1 into start.
+        starts = np.searchsorted(cov.lo, np.arange(nb + 1, dtype=np.int64)
+                                 << shift, side="left").astype(np.int32)
+        # Static iteration count for the in-bucket binary search: the range
+        # for bucket b is [starts[b]-1, starts[b+1]) — higher gbits => fewer
+        # iterations, the paper's F1/F2/F4 fanout-vs-memory trade.
+        max_span = int(np.max(starts[1:] - np.maximum(starts[:-1] - 1, 0))) \
+            if len(cov.lo) else 1
+        iters = max(1, int(np.ceil(np.log2(max(max_span, 2)))))
+        x0, x1, y0, y1 = cov.extent
+        n = 1 << cov.max_level
+        quant = np.array([x0, y0, n / (x1 - x0), n / (y1 - y0)], np.float32)
+        return cls(
+            cell_lo=jnp.asarray(cov.lo),
+            cell_hi=jnp.asarray(cov.hi),
+            cell_val=jnp.asarray(cov.val),
+            cand=jnp.asarray(cov.cand),
+            top_start=jnp.asarray(starts),
+            block_edges=jnp.asarray(ops.edges_from_soup_np(
+                census.blocks.verts)),
+            block_parent=jnp.asarray(census.blocks.parent),
+            county_parent=jnp.asarray(census.counties.parent),
+            quant=jnp.asarray(quant),
+            max_level=cov.max_level,
+            gbits=gbits,
+            search_iters=iters,
+        )
+
+
+def leaf_codes(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
+    n = 1 << index.max_level
+    ix = jnp.clip(((points[:, 0] - index.quant[0]) * index.quant[2])
+                  .astype(jnp.int32), 0, n - 1)
+    iy = jnp.clip(((points[:, 1] - index.quant[1]) * index.quant[3])
+                  .astype(jnp.int32), 0, n - 1)
+    return morton(ix, iy)
+
+
+def locate_cells(index: FastIndex, codes: jnp.ndarray) -> jnp.ndarray:
+    """Index into cell_lo of the covering cell for each leaf code (-1 =
+    outside the map)."""
+    n_cells = index.cell_lo.shape[0]
+    if index.gbits == 0:
+        # Plain vectorized binary search over the full table.
+        idx = jnp.searchsorted(index.cell_lo, codes, side="right") - 1
+    else:
+        shift = 2 * (index.max_level - index.gbits)
+        bucket = (codes >> shift).astype(jnp.int32)
+        l = jnp.maximum(index.top_start[bucket] - 1, 0)
+        h = index.top_start[bucket + 1]         # exclusive
+        # Fixed-iteration searchsorted-right within [l, h).
+        for _ in range(index.search_iters):
+            active = l < h
+            mid = (l + h) // 2
+            go_right = index.cell_lo[jnp.clip(mid, 0, n_cells - 1)] <= codes
+            nl = jnp.where(active & go_right, mid + 1, l)
+            nh = jnp.where(active & ~go_right, mid, h)
+            l, h = nl, nh
+        idx = l - 1
+    idx = jnp.clip(idx, 0, n_cells - 1)
+    return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class FastConfig:
+    mode: str = "exact"          # "exact" | "approx"
+    cap_boundary: float = 0.25   # compaction capacity for boundary points
+    backend: str | None = None
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def assign_fast(index: FastIndex, points: jnp.ndarray,
+                cfg: FastConfig = FastConfig()):
+    """Map [N, 2] points -> (state, county, block ids, stats)."""
+    n = points.shape[0]
+    codes = leaf_codes(index, points)
+    cidx = locate_cells(index, codes)
+    in_cell = ((index.cell_lo[cidx] <= codes)
+               & (codes <= index.cell_hi[cidx]))  # gap => outside the map
+    val = jnp.where(in_cell, index.cell_val[cidx], -2**30)
+    is_boundary = val < 0
+    brow = jnp.clip(-(val + 1), 0, max(index.cand.shape[0] - 1, 0))
+    bid = jnp.where(val >= 0, val, -1)
+
+    n_boundary = jnp.sum((is_boundary & (val > -2**30)).astype(jnp.int32))
+    n_pip = jnp.zeros((), jnp.int32)
+    overflow = jnp.zeros((), jnp.int32)
+
+    if index.cand.shape[0] > 0:
+        if cfg.mode == "approx":
+            # Centre-owner candidate; error <= leaf cell diagonal.  Gather
+            # only slot 0 ([N] i32) instead of the full [N, K] table.
+            cand0 = index.cand[brow, 0]
+            bid = jnp.where(is_boundary & (val > -2**30), cand0, bid)
+        else:
+            cands = index.cand[brow]                 # [N, K]
+            need = is_boundary & (val > -2**30)
+            cap = min(_round_up(max(int(n * cfg.cap_boundary), 256), 256), n)
+            idx, slot_ok = compact_indices(need, cap)   # O(N), not argsort
+            sub_pts = points[idx]
+            sub_need = need[idx] & slot_ok
+            sub_cands = cands[idx]
+            # Two-phase resolution (§Perf geo iterations 2-3): the centre-
+            # owner candidate (slot 0) resolves ~90 % of boundary points, so
+            # phase 1 tests ONLY slot 0 for all points; phase 2 batches the
+            # remaining K-1 candidates for the ~10 % of misses in one
+            # expanded kernel call (vs K sequential calls originally).
+            kk = index.cand.shape[1]
+            pid0 = sub_cands[:, 0]
+            edges0 = index.block_edges[jnp.clip(pid0, 0, None)]
+            in0 = ops.pip_gathered(sub_pts, edges0, backend=cfg.backend)
+            in0 = in0 & (pid0 >= 0) & sub_need
+            n_pip = jnp.sum(sub_need.astype(jnp.int32))
+
+            miss = sub_need & ~in0
+            cap2 = min(_round_up(max(cap // 4, 256), 256), cap)
+            idx2, ok2 = compact_indices(miss, cap2)
+            rest = sub_cands[idx2, 1:]                        # [R2, K-1]
+            flat_pid = rest.reshape(-1)
+            pts_rep = jnp.repeat(sub_pts[idx2], kk - 1, axis=0)
+            edges = index.block_edges[jnp.clip(flat_pid, 0, None)]
+            in_r = ops.pip_gathered(pts_rep, edges, backend=cfg.backend)
+            in_r = (in_r & (flat_pid >= 0)).reshape(-1, kk - 1)
+            n_pip = n_pip + jnp.sum((miss[idx2][:, None]
+                                     & (rest >= 0)).astype(jnp.int32))
+            score = jnp.where(in_r, kk - jnp.arange(1, kk)[None, :], 0)
+            best = jnp.argmax(score, axis=1)
+            hit2 = jnp.any(in_r, axis=1) & miss[idx2] & ok2
+            val2 = jnp.take_along_axis(rest, best[:, None], axis=1)[:, 0]
+            assign = jnp.where(in0, pid0, -1)
+            assign = assign.at[idx2].set(
+                jnp.where(hit2, val2, assign[idx2]))
+            # Unmatched boundary points fall back to the centre owner.
+            fallback = jnp.where(sub_cands[:, 0] >= 0, sub_cands[:, 0], -1)
+            new_bid = jnp.where(sub_need,
+                                jnp.where(assign >= 0, assign, fallback),
+                                bid[idx])
+            bid = bid.at[idx].set(new_bid)
+            overflow = n_boundary - jnp.sum(sub_need.astype(jnp.int32))
+
+    cid = jnp.where(bid >= 0, index.block_parent[jnp.clip(bid, 0, None)], -1)
+    sid = jnp.where(cid >= 0, index.county_parent[jnp.clip(cid, 0, None)], -1)
+    stats = {"n_boundary": n_boundary, "n_pip": n_pip, "overflow": overflow}
+    return sid, cid, bid, stats

@@ -1,0 +1,237 @@
+"""The paper's "simple" approach (§III), TPU-adapted.
+
+Three-stage cascade: state -> county -> block.  At each level a point is
+tested against the bounding boxes of the *children of its current parent*
+(the hierarchy is what keeps candidate sets tiny).  Points inside exactly one
+bbox are resolved for free (paper: ~80 %); the rest go through the
+crossing-number kernel against at most ``k_cand`` candidate polygons.
+
+TPU adaptation vs the Matlab/GraphBLAS original (see DESIGN.md §2):
+  * sparse bbox outer products  -> dense Pallas tiles (`kernels/bbox.py`);
+  * per-state `find()` loops    -> fixed-capacity compaction: unresolved
+    points are argsort-compacted into a static-shape buffer, resolved with
+    the gathered-PIP kernel, and scattered back.  Capacity overflow is
+    *counted and reported* (stats.overflow) rather than silently dropped —
+    callers either size capacities generously or re-run stragglers on host.
+  * everything is a single jit-able function of device arrays -> it fuses
+    into data pipelines and shards over ("pod","data") by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compact import compact_indices
+from repro.core.geometry import CensusMap, children_tables
+from repro.kernels import ops, ref
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimpleIndex:
+    """Device-resident flattened census hierarchy.
+
+    bbox tables carry one trailing sentinel row (empty box) so parent id -1
+    gathers a never-matching candidate; children tables carry a sentinel row
+    of -1s for the same reason.
+    """
+
+    state_bbox: Any      # [Ns+1, 4] f32 (sentinel last)
+    county_bbox: Any     # [Nc+1, 4]
+    block_bbox: Any      # [Nb+1, 4]
+    state_edges: Any     # [Ns, Es, 4] f32
+    county_edges: Any    # [Nc, Ec, 4]
+    block_edges: Any     # [Nb, Eb, 4]
+    county_children: Any # [Ns+1, Cc] i32, -1 padded
+    block_children: Any  # [Nc+1, Cb] i32
+    block_parent: Any    # [Nb] i32 (county of each block)
+    county_parent: Any   # [Nc] i32
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_census(cls, census: CensusMap, pad_children: int = 128):
+        def bbox_with_sentinel(soup):
+            bb = np.concatenate(
+                [soup.bbox, np.array([[1.0, 0.0, 1.0, 0.0]], np.float32)], 0)
+            return jnp.asarray(bb)
+
+        def edges(soup):
+            return jnp.asarray(ops.edges_from_soup_np(soup.verts))
+
+        def children(soup, n_parents):
+            ids, _ = children_tables(soup, n_parents)
+            sentinel = np.full((1, ids.shape[1]), -1, np.int32)
+            return jnp.asarray(np.concatenate([ids, sentinel], 0))
+
+        return cls(
+            state_bbox=bbox_with_sentinel(census.states),
+            county_bbox=bbox_with_sentinel(census.counties),
+            block_bbox=bbox_with_sentinel(census.blocks),
+            state_edges=edges(census.states),
+            county_edges=edges(census.counties),
+            block_edges=edges(census.blocks),
+            county_children=children(census.counties, census.states.n_poly),
+            block_children=children(census.blocks, census.counties.n_poly),
+            block_parent=jnp.asarray(census.blocks.parent),
+            county_parent=jnp.asarray(census.counties.parent),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimpleConfig:
+    """Static cascade knobs (part of the jit cache key)."""
+
+    k_cand: int = 4          # max PIP candidates per point per level
+    cap_state: float = 0.25  # compaction capacity as a fraction of N
+    cap_county: float = 0.5
+    cap_block: float = 0.5
+    backend: str | None = None  # kernel backend override
+
+
+def _first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Slots of the first k set bits per row of a [R, C] mask (else -1)."""
+    c = mask.shape[1]
+    iota = jnp.arange(c, dtype=jnp.int32)[None, :]
+    score = jnp.where(mask != 0, c - iota, 0)       # larger = earlier slot
+    vals, _ = jax.lax.top_k(score, k)
+    return jnp.where(vals > 0, c - vals, -1)        # [R, k] slot indices
+
+
+def _compact_indices(unresolved: jnp.ndarray, cap: int):
+    """Indices of unresolved points, compacted to a static-size buffer
+    (O(N) cumsum compaction; see core/compact.py).  Returns (idx, valid)."""
+    return compact_indices(unresolved, cap)
+
+
+def _resolve_level(points, idx, cand_ids, edges_table, unresolved, backend):
+    """PIP-resolve compacted points against their candidate polygon ids.
+
+    Args:
+      points:      [R, 2] compacted points.
+      idx:         [R] original indices (for stats only; unused here).
+      cand_ids:    [R, K] candidate polygon ids (-1 = none).
+      edges_table: [P, E, 4] level edge table.
+      unresolved:  [R] bool — rows actually needing resolution.
+    Returns:
+      assign [R] i32 (-1 if nothing matched), n_pip_tests [] i32.
+    """
+    k = cand_ids.shape[1]
+    assign = jnp.full(points.shape[0], -1, jnp.int32)
+    n_tests = jnp.zeros((), jnp.int32)
+    for kk in range(k):
+        pid = cand_ids[:, kk]
+        active = unresolved & (pid >= 0) & (assign < 0)
+        edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
+        inside = ops.pip_gathered(points, edges, backend=backend)
+        assign = jnp.where(active & inside, pid, assign)
+        n_tests = n_tests + jnp.sum(active.astype(jnp.int32))
+    return assign, n_tests
+
+
+def _level_pass(points, parent, children_table, bbox_table, edges_table,
+                cap: int, k_cand: int, backend):
+    """One hierarchy level: bbox count/select then PIP fallback.
+
+    Args:
+      points: [N, 2]; parent: [N] i32 id into the *parent* level (-1 = lost).
+    Returns:
+      (assign [N] i32 child ids, stats dict)
+    """
+    n = points.shape[0]
+    n_parents = children_table.shape[0] - 1
+    parent_ix = jnp.where(parent >= 0, parent, n_parents)      # sentinel row
+    cand = children_table[parent_ix]                            # [N, C]
+    cand_ix = jnp.where(cand >= 0, cand, bbox_table.shape[0] - 1)
+    boxes = bbox_table[cand_ix]                                 # [N, C, 4]
+    cnt, sel = ops.bbox_count_select(points, boxes, backend=backend)
+    assign = jnp.where(sel >= 0,
+                       jnp.take_along_axis(cand, sel[:, None].clip(0),
+                                           axis=1)[:, 0],
+                       -1)
+    unresolved = cnt > 1
+    # --- fixed-capacity compaction + PIP fallback ---
+    idx, slot_ok = _compact_indices(unresolved, cap)
+    sub_pts = points[idx]
+    sub_unres = unresolved[idx] & slot_ok
+    sub_mask = ref.bbox_mask_gathered(sub_pts, boxes[idx])      # [R, C] i8
+    cand_slots = _first_k_candidates(sub_mask, k_cand)          # [R, K]
+    sub_cand = jnp.take_along_axis(cand[idx], cand_slots.clip(0), axis=1)
+    sub_cand = jnp.where(cand_slots >= 0, sub_cand, -1)
+    resolved, n_pip = _resolve_level(sub_pts, idx, sub_cand, edges_table,
+                                     sub_unres, backend)
+    # Points whose PIP found nothing keep the bbox select (boundary grazing).
+    new_val = jnp.where(sub_unres,
+                        jnp.where(resolved >= 0, resolved, assign[idx]),
+                        assign[idx])
+    assign = assign.at[idx].set(new_val)
+    overflow = jnp.sum(unresolved.astype(jnp.int32)) - \
+        jnp.sum(sub_unres.astype(jnp.int32))
+    stats = {"n_multi": jnp.sum(unresolved.astype(jnp.int32)),
+             "n_pip": n_pip, "overflow": overflow}
+    return assign, stats
+
+
+def _assign_impl(index: SimpleIndex, points: jnp.ndarray, cfg: SimpleConfig):
+    n = points.shape[0]
+    backend = cfg.backend
+
+    # --- Stage 1: states (flat bbox mask over all states) ---
+    ns = index.state_bbox.shape[0] - 1
+    mask = ops.bbox_mask(points, index.state_bbox[:ns], backend=backend)
+    cnt = jnp.sum(mask.astype(jnp.int32), axis=1)
+    iota = jnp.arange(ns, dtype=jnp.int32)[None, :]
+    sid = jnp.max(jnp.where(mask != 0, iota, -1), axis=1)
+    unresolved = cnt > 1
+    cap1 = min(_round_up(max(int(n * cfg.cap_state), 256), 256), n)
+    idx, slot_ok = _compact_indices(unresolved, cap1)
+    sub_unres = unresolved[idx] & slot_ok
+    cand_slots = _first_k_candidates(mask[idx], cfg.k_cand)
+    resolved, n_pip1 = _resolve_level(points[idx], idx, cand_slots,
+                                      index.state_edges, sub_unres,
+                                      backend)
+    new_sid = jnp.where(sub_unres,
+                        jnp.where(resolved >= 0, resolved, sid[idx]),
+                        sid[idx])
+    sid = sid.at[idx].set(new_sid)
+    s_stats = {"n_multi": jnp.sum(unresolved.astype(jnp.int32)),
+               "n_pip": n_pip1,
+               "overflow": jnp.sum(unresolved.astype(jnp.int32))
+               - jnp.sum(sub_unres.astype(jnp.int32))}
+
+    # --- Stage 2: counties of the point's state ---
+    cap2 = min(_round_up(max(int(n * cfg.cap_county), 256), 256), n)
+    cid, c_stats = _level_pass(points, sid, index.county_children,
+                               index.county_bbox, index.county_edges,
+                               cap2, cfg.k_cand, backend)
+
+    # --- Stage 3: blocks of the point's county ---
+    cap3 = min(_round_up(max(int(n * cfg.cap_block), 256), 256), n)
+    bid, b_stats = _level_pass(points, cid, index.block_children,
+                               index.block_bbox, index.block_edges,
+                               cap3, cfg.k_cand, backend)
+
+    stats = {"state": s_stats, "county": c_stats, "block": b_stats}
+    return sid, cid, bid, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def assign_simple(index: SimpleIndex, points: jnp.ndarray,
+                  cfg: SimpleConfig = SimpleConfig()):
+    """Map [N, 2] (lon, lat) points to (state, county, block) ids + stats."""
+    return _assign_impl(index, points, cfg)

@@ -1,0 +1,104 @@
+"""Deterministic, stateless data pipeline.
+
+Every batch is a pure function of (seed, step) — ``batch_at(step)`` — so a
+restarted job resumes *bitwise* identically with zero pipeline state in the
+checkpoint, and elastic re-sharding only re-slices the same global batch.
+This statelessness is the fault-tolerance contract the runtime relies on.
+
+Two sources:
+  * SyntheticLM  — reproducible token streams (zipf-ish unigram mixture with
+    a per-sequence "topic" so the loss is learnable, not pure noise).
+  * GeoEnriched  — wraps another source and joins each record's (lon, lat)
+    onto census blocks with the paper's fast index, appending the block id
+    as a feature token — the paper's technique as a first-class pipeline
+    stage (core/enrich.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    """batch_at(step) -> {"tokens", "labels"} (+modality stubs)."""
+
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    n_topics: int = 64
+
+    def _key(self, step: int):
+        return jax.random.fold_in(jax.random.key(self.seed), step)
+
+    def batch_at(self, step: int) -> dict:
+        k = self._key(step)
+        kt, kz, kn = jax.random.split(k, 3)
+        v = self.cfg.vocab
+        # Per-sequence topic biases a small token subset -> learnable stats.
+        topic = jax.random.randint(kz, (self.batch, 1), 0, self.n_topics)
+        base = jax.random.randint(kt, (self.batch, self.seq + 1), 0, v)
+        bias = (topic * 97 + jnp.arange(self.seq + 1) % 13) % v
+        use_bias = jax.random.bernoulli(kn, 0.5,
+                                        (self.batch, self.seq + 1))
+        toks = jnp.where(use_bias, bias, base).astype(jnp.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.family == "vlm":
+            out["img"] = jax.random.normal(
+                kz, (self.batch, self.cfg.n_img_tokens, self.cfg.d_vision),
+                jnp.bfloat16)
+        if self.cfg.family == "encdec":
+            out["frames"] = jax.random.normal(
+                kz, (self.batch, self.seq, self.cfg.d_model), jnp.bfloat16)
+        return out
+
+
+@dataclasses.dataclass
+class GeoEnriched:
+    """Wraps a source; each sequence carries a (lon, lat) and its census
+    block id (via the paper's fast index) is prepended as a feature token
+    ``vocab_geo_base + (block_id % n_geo_tokens)``."""
+
+    source: SyntheticLM
+    fast_index: object               # core.fast.FastIndex
+    fast_cfg: object                 # core.fast.FastConfig
+    points_seed: int = 7
+    n_geo_tokens: int = 1024
+
+    def batch_at(self, step: int) -> dict:
+        from repro.core.fast import assign_fast
+        out = dict(self.source.batch_at(step))
+        b = out["tokens"].shape[0]
+        k = jax.random.fold_in(jax.random.key(self.points_seed), step)
+        x0, x1, y0, y1 = [float(v) for v in np.asarray(
+            self.fast_index.quant)[:2]] + [0.0, 0.0]
+        # Sample device-side points uniformly in the map extent.
+        q = self.fast_index.quant
+        n = 1 << self.fast_index.max_level
+        u = jax.random.uniform(k, (b, 2))
+        xy = jnp.stack([q[0] + u[:, 0] * (n / q[2]),
+                        q[1] + u[:, 1] * (n / q[3])], axis=-1)
+        _, _, bid, _ = assign_fast(self.fast_index, xy, self.fast_cfg)
+        geo_tok = (jnp.maximum(bid, 0) % self.n_geo_tokens).astype(jnp.int32)
+        tokens = out["tokens"].at[:, 0].set(
+            geo_tok % self.source.cfg.vocab)
+        out["tokens"] = tokens
+        out["geo_block"] = bid
+        return out
+
+
+def make_source(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
+                geo: Optional[tuple] = None):
+    src = SyntheticLM(cfg=cfg, batch=shape.global_batch, seq=shape.seq_len,
+                      seed=seed)
+    if geo is not None:
+        index, fcfg = geo
+        return GeoEnriched(source=src, fast_index=index, fast_cfg=fcfg)
+    return src

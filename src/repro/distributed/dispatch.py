@@ -1,0 +1,97 @@
+"""Shared capacity-bucketed dispatch used by both the MoE layer and the
+sharded geo-index lookup (DESIGN.md: the paper's sharded cell index *is* an
+expert-dispatch problem — same primitive, different payload).
+
+Given per-item integer bucket ids, produce a static-shape routing plan:
+items are stably sorted by bucket, positioned within their bucket, and
+dropped beyond ``capacity`` (dropping is counted, never silent).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class RoutePlan(NamedTuple):
+    order: jnp.ndarray      # [N] permutation: items sorted by bucket
+    bucket: jnp.ndarray     # [N] bucket id per sorted item
+    slot: jnp.ndarray       # [N] position within bucket (sorted order)
+    keep: jnp.ndarray       # [N] bool — survives capacity (sorted order)
+    flat_ix: jnp.ndarray    # [N] index into [n_buckets*capacity] buffer
+                            #     (overflow -> n_buckets*capacity sentinel)
+    n_dropped: jnp.ndarray  # [] i32
+
+
+def plan_routes(bucket_ids: jnp.ndarray, n_buckets: int,
+                capacity: int) -> RoutePlan:
+    """bucket_ids: [N] i32 in [0, n_buckets]; id == n_buckets means "not
+    mine / inactive" and is never kept."""
+    n = bucket_ids.shape[0]
+    order = jnp.argsort(bucket_ids, stable=True)
+    sb = bucket_ids[order]
+    pos = (jnp.arange(n, dtype=jnp.int32)
+           - jnp.searchsorted(sb, sb, side="left").astype(jnp.int32))
+    active = sb < n_buckets
+    keep = active & (pos < capacity)
+    flat = jnp.where(keep, sb * capacity + pos, n_buckets * capacity)
+    n_dropped = jnp.sum((active & ~keep).astype(jnp.int32))
+    return RoutePlan(order=order, bucket=sb, slot=pos, keep=keep,
+                     flat_ix=flat.astype(jnp.int32), n_dropped=n_dropped)
+
+
+def slot_tables(plan: RoutePlan, n_buckets: int, capacity: int,
+                item_of: jnp.ndarray | None = None,
+                weights: jnp.ndarray | None = None):
+    """Inverse routing tables, indexed by *buffer slot* (not route entry).
+
+    Scattering only int32 indices (never [N, D] payloads) keeps the dispatch
+    memory bounded by the capacity buffer — scattering payload rows makes
+    XLA materialize [N, D] plus same-sized u32 index arrays, which for
+    top-6 MoE at 4k seq is tens of GiB.
+
+    Returns (item_for_slot [n_buckets*capacity] i32 with -1 = empty,
+             weight_for_slot [n_buckets*capacity] f32).
+    """
+    n_slots = n_buckets * capacity
+    src_items = plan.order if item_of is None else item_of[plan.order]
+    src_items = jnp.where(plan.keep, src_items, -1)
+    ifs = jnp.full((n_slots + 1,), -1, jnp.int32)
+    ifs = ifs.at[plan.flat_ix].set(src_items.astype(jnp.int32), mode="drop")
+    if weights is None:
+        wfs = (ifs[:-1] >= 0).astype(jnp.float32)
+    else:
+        w = jnp.where(plan.keep, weights[plan.order].astype(jnp.float32),
+                      0.0)
+        wfs = jnp.zeros((n_slots + 1,), jnp.float32)
+        wfs = wfs.at[plan.flat_ix].set(w, mode="drop")
+        wfs = wfs[:-1]
+    return ifs[:-1], wfs
+
+
+def scatter_to_buckets(plan: RoutePlan, payload: jnp.ndarray,
+                       n_buckets: int, capacity: int,
+                       item_of: jnp.ndarray | None = None,
+                       item_for_slot: jnp.ndarray | None = None
+                       ) -> jnp.ndarray:
+    """payload: [n_items, D] in original item order.  Fills the capacity
+    buffer by *gathering* payload rows per slot (see slot_tables).
+
+    Returns [n_buckets * capacity, D]; empty/dropped rows are zero.
+    """
+    if item_for_slot is None:
+        item_for_slot, _ = slot_tables(plan, n_buckets, capacity, item_of)
+    rows = payload[jnp.clip(item_for_slot, 0, payload.shape[0] - 1)]
+    return rows * (item_for_slot >= 0)[:, None].astype(payload.dtype)
+
+
+def gather_from_buckets(slot_tabs, buf: jnp.ndarray,
+                        n_items: int) -> jnp.ndarray:
+    """Combine buffer rows back per original item (duplicates summed,
+    e.g. top-k routing).  buf: [n_buckets*capacity, D];
+    slot_tabs: (item_for_slot, weight_for_slot) from slot_tables()."""
+    ifs, wfs = slot_tabs
+    rows = buf * wfs[:, None].astype(buf.dtype)
+    out = jnp.zeros((n_items, buf.shape[-1]), buf.dtype)
+    return out.at[jnp.clip(ifs, 0, n_items - 1)].add(
+        rows * (ifs >= 0)[:, None].astype(buf.dtype), mode="drop")

@@ -1,0 +1,173 @@
+"""Fused flash-attention Pallas kernel (TPU target, interpret-validated).
+
+EXPERIMENTS.md §Perf iterations 1.1/1.3 measured that the XLA lowering of
+the blockwise attention materializes every f32 score/probability tile in
+HBM — the dominant memory-roofline term of all train/prefill cells — and
+that no jnp-level rewrite removes them.  This kernel is the structural fix
+(mirroring the paper's own simple->fast arc): the online-softmax state
+(m, l, acc) lives in VMEM scratch across KV tiles, so per-tile scores never
+touch HBM.
+
+Forward-only: serving/prefill use it directly; training integration needs
+a custom VJP with recomputation (future work, noted in DESIGN.md §8).
+
+Layout: q/k/v as [BH, S, D] (batch*heads leading); grid (BH, nq, nk) with
+the KV axis innermost/sequential.  Causal masking is computed from program
+ids; padded tail positions are masked by sequence-length bounds.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BQ = 256
+DEF_BK = 256
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, seq_len: int, bq: int, bk: int,
+                  scale: float):
+    i = pl.program_id(1)           # q tile
+    j = pl.program_id(2)           # kv tile (sequential)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                      # [bq, D]
+    k = k_ref[0]                                      # [bk, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = kpos < seq_len
+    if causal:
+        ok &= kpos <= qpos
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # [bq, bk] f32, VMEM
+    r = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * r + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * r + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attn_bhsd(q, k, v, *, causal: bool = True, bq: int = DEF_BQ,
+                    bk: int = DEF_BK, interpret: bool = False):
+    """q/k/v: [BH, S, D] (same S, pre-padded to tile multiples by ops.py).
+
+    Returns [BH, S, D] in q.dtype.  Scores/softmax state stay in VMEM.
+    """
+    bh, s, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    assert s % bq_ == 0 and s % bk_ == 0, (s, bq_, bk_)
+    grid = (bh, s // bq_, s // bk_)
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(_flash_kernel, causal=causal, seq_len=s,
+                               bq=bq_, bk=bk_, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),      # m
+            pltpu.VMEM((bq_, 1), jnp.float32),      # l
+            pltpu.VMEM((bq_, d), jnp.float32),      # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attn(q, k, v, *, causal: bool = True, bq: int = DEF_BQ,
+               bk: int = DEF_BK, interpret: bool = False):
+    """Convenience wrapper: q [B,S,H,D], k/v [B,S,KH,D] (KV repeated to H).
+
+    Requires S to be a multiple of the (auto-clamped) tile sizes — the
+    production shapes are powers of two; ragged tails belong to the caller.
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    assert s % bq_ == 0 and s % bk_ == 0, \
+        f"seq {s} must be a multiple of the tile ({bq_}, {bk_})"
+    q2 = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    k2 = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d)
+    v2 = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d)
+    o = flash_attn_bhsd(q2, k2, v2, causal=causal, bq=bq_, bk=bk_,
+                        interpret=interpret)
+    return jnp.moveaxis(o.reshape(b, h, s, d), 1, 2)
+
+
+def make_flash_attn_trainable(*, causal: bool = True, bq: int = DEF_BQ,
+                              bk: int = DEF_BK, interpret: bool = False,
+                              chunk: int = 1024):
+    """Training-capable flash attention: forward runs the fused Pallas
+    kernel; backward recomputes through the checkpointed blockwise-jnp
+    path (the standard recompute-based flash VJP, reusing the oracle as
+    the gradient program — bitwise-compatible semantics, no saved score
+    tiles).
+
+    Returns f(q [B,S,H,D], k/v [B,S,KH,D]) -> [B,S,H,D].
+    """
+    from repro.models.attention import blockwise_attn
+
+    def reference(q, k, v):
+        kh = k.shape[2]
+        g = q.shape[2] // kh
+        k_ = jnp.repeat(k, g, axis=2) if g > 1 else k
+        v_ = jnp.repeat(v, g, axis=2) if g > 1 else v
+        return blockwise_attn(q, k_, v_, causal=causal,
+                              chunk_q=min(chunk, q.shape[1]),
+                              chunk_kv=min(chunk, q.shape[1]))
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attn(q, k, v, causal=causal, bq=bq, bk=bk,
+                          interpret=interpret)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(reference, q, k, v)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f

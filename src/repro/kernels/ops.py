@@ -1,0 +1,127 @@
+"""Public kernel API: natural layouts, padding, backend dispatch.
+
+Backend selection (``REPRO_KERNELS`` env var or explicit ``backend=``):
+  * ``pallas``    — compiled Pallas TPU kernels (the deployment target).
+  * ``interpret`` — Pallas kernels under ``interpret=True`` (kernel body
+                    executed in Python/XLA on CPU; used to validate the
+                    kernels off-TPU, incl. in CI).
+  * ``ref``       — pure-jnp oracles from ref.py (fast on CPU, and the
+                    ground truth the kernels are tested against).
+  * ``auto``      — ``pallas`` on TPU, ``ref`` elsewhere (default).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bbox as bbox_kernels
+from repro.kernels import pip as pip_kernels
+from repro.kernels import ref
+
+# A padding point guaranteed outside every bbox / polygon we generate.
+FAR = 1.0e30
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    b = backend or os.environ.get("REPRO_KERNELS", "auto")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert b in ("pallas", "interpret", "ref"), b
+    return b
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pip_one(points: jnp.ndarray, edges: jnp.ndarray,
+            backend: str | None = None) -> jnp.ndarray:
+    """Inside mask of [N, 2] points vs one polygon's [E, 4] edge table."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.pip_one(points, edges)
+    n = points.shape[0]
+    bp, be = pip_kernels.DEF_BP, pip_kernels.DEF_BE
+    pts = _pad_axis(points.astype(jnp.float32), 0, bp, FAR)
+    edges_t = _pad_axis(edges.astype(jnp.float32).T, 1, be, 0.0)
+    cross = pip_kernels.crossings_one(pts, edges_t,
+                                      interpret=(b == "interpret"))
+    return (cross[:n] & 1).astype(jnp.bool_)
+
+
+def pip_gathered(points: jnp.ndarray, edges: jnp.ndarray,
+                 backend: str | None = None) -> jnp.ndarray:
+    """Inside mask where each point brings its own [E, 4] edges: [N, E, 4]."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.pip_gathered(points, edges)
+    n = points.shape[0]
+    bp, be = pip_kernels.DEF_BP, pip_kernels.DEF_BE
+    pts = _pad_axis(points.astype(jnp.float32), 0, bp, FAR)
+    edges_t = jnp.swapaxes(edges.astype(jnp.float32), 1, 2)   # [N, 4, E]
+    edges_t = _pad_axis(_pad_axis(edges_t, 2, be, 0.0), 0, bp, 0.0)
+    cross = pip_kernels.crossings_gathered(pts, edges_t,
+                                           interpret=(b == "interpret"))
+    return (cross[:n] & 1).astype(jnp.bool_)
+
+
+def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray,
+              backend: str | None = None) -> jnp.ndarray:
+    """[N, M] int8 membership of points in a shared [M, 4] box table."""
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.bbox_mask(points, boxes)
+    n, m = points.shape[0], boxes.shape[0]
+    bp, bm = bbox_kernels.DEF_BP, bbox_kernels.DEF_BM
+    pts = _pad_axis(points.astype(jnp.float32), 0, bp, FAR)
+    # Pad with empty boxes (xmin=1 > xmax=0).
+    boxes_t = boxes.astype(jnp.float32).T                     # [4, M]
+    pad = (-m) % bm
+    if pad:
+        empty = jnp.tile(jnp.array([[1.0], [0.0], [1.0], [0.0]],
+                                   dtype=jnp.float32), (1, pad))
+        boxes_t = jnp.concatenate([boxes_t, empty], axis=1)
+    out = bbox_kernels.bbox_mask(pts, boxes_t,
+                                 interpret=(b == "interpret"))
+    return out[:n, :m]
+
+
+def bbox_count_select(points: jnp.ndarray, boxes: jnp.ndarray,
+                      backend: str | None = None):
+    """Fused count+select over per-point gathered boxes [N, C, 4].
+
+    Padded slots must already be empty boxes; C is padded here to a lane
+    multiple with empties.  Returns (count [N] i32, sel [N] i32).
+    """
+    b = resolve_backend(backend)
+    if b == "ref":
+        return ref.bbox_count_select(points, boxes)
+    n, c = points.shape[0], boxes.shape[1]
+    bp = bbox_kernels.DEF_BP
+    pts = _pad_axis(points.astype(jnp.float32), 0, bp, FAR)
+    boxes_t = jnp.swapaxes(boxes.astype(jnp.float32), 1, 2)   # [N, 4, C]
+    cpad = (-c) % 128
+    if cpad:
+        empty = jnp.zeros((boxes_t.shape[0], 4, cpad), jnp.float32)
+        empty = empty.at[:, 0, :].set(1.0)                    # xmin=1 > xmax=0
+        boxes_t = jnp.concatenate([boxes_t, empty], axis=2)
+    boxes_t = _pad_axis(boxes_t, 0, bp, 0.0)
+    cnt, sel = bbox_kernels.bbox_count_select(pts, boxes_t,
+                                              interpret=(b == "interpret"))
+    return cnt[:n], sel[:n]
+
+
+def edges_from_soup_np(verts: np.ndarray) -> np.ndarray:
+    """[P, max_v+1, 2] padded rings -> [P, max_v, 4] edge tables (host)."""
+    a = verts[:, :-1, :]
+    c = verts[:, 1:, :]
+    return np.concatenate([a, c], axis=-1)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for the crossing-number point-in-polygon test.
+
+This is the paper's compute hot-spot (§III-A): every point that survives the
+bbox filter cascade is tested against candidate polygon edge tables.  The
+paper's optimized CPU variant (y-sort + binary search over edges) is branchy
+and serial; the TPU-native formulation is a dense ``points x edges`` parity
+reduction on the VPU:
+
+  * points tile   [BP, 2]   -> VMEM (BP on sublanes)
+  * edge tile     [4, BE]   -> VMEM, struct-of-arrays layout so the edge
+                               axis lands on the 128-wide lane dimension
+  * crossing tile [BP, BE]  -> compare/multiply only (no division), then
+                               reduced into an int32 accumulator [BP, 1]
+                               that stays VMEM-resident across edge tiles.
+
+The grid is (point_tiles, edge_tiles); the edge axis is ``arbitrary``
+(sequential) so the output tile accumulates, the point axis is ``parallel``.
+Degenerate (zero-length) padding edges produce no crossings by construction,
+so ops.py can pad freely to tile multiples.
+
+``*_kernel`` bodies are layout-transposed; use ops.py for the public API
+(natural layouts, padding, interpret-mode switch, parity -> bool).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes: BP on sublanes (multiple of 8), BE on lanes (multiple
+# of 128).  VMEM footprint ~ BP*BE*4B per f32 temp; (256, 512) keeps the
+# working set ~2-3 MiB.
+DEF_BP = 256
+DEF_BE = 512
+
+
+def _cross_tile(px, py, x1, y1, x2, y2):
+    """Crossing mask for a [BP, BE] tile (see kernels/ref.py for semantics)."""
+    straddle = (y1 > py) != (y2 > py)
+    lhs = (px - x1) * (y2 - y1)
+    rhs = (py - y1) * (x2 - x1)
+    return straddle & ((lhs < rhs) == (y2 > y1))
+
+
+def _pip_one_kernel(pts_ref, edg_ref, out_ref):
+    """One shared polygon: pts [BP, 2], edges [4, BE], out [BP, 1] i32."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    px = pts_ref[:, 0:1]                      # [BP, 1]
+    py = pts_ref[:, 1:2]
+    x1 = edg_ref[0:1, :]                      # [1, BE]
+    y1 = edg_ref[1:2, :]
+    x2 = edg_ref[2:3, :]
+    y2 = edg_ref[3:4, :]
+    cross = _cross_tile(px, py, x1, y1, x2, y2)          # [BP, BE]
+    out_ref[...] += jnp.sum(cross.astype(jnp.int32), axis=1, keepdims=True)
+
+
+def _pip_gathered_kernel(pts_ref, edg_ref, out_ref):
+    """Per-point polygons: pts [BP, 2], edges [BP, 4, BE], out [BP, 1] i32."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    px = pts_ref[:, 0:1]
+    py = pts_ref[:, 1:2]
+    x1 = edg_ref[:, 0, :]                     # [BP, BE]
+    y1 = edg_ref[:, 1, :]
+    x2 = edg_ref[:, 2, :]
+    y2 = edg_ref[:, 3, :]
+    cross = _cross_tile(px, py, x1, y1, x2, y2)
+    out_ref[...] += jnp.sum(cross.astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
+def crossings_one(points: jnp.ndarray, edges_t: jnp.ndarray,
+                  bp: int = DEF_BP, be: int = DEF_BE,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Crossing counts of [N, 2] points against one [4, E] edge table.
+
+    N must be a multiple of bp and E of be (ops.py pads).  Returns [N] i32.
+    """
+    n = points.shape[0]
+    e = edges_t.shape[1]
+    grid = (n // bp, e // be)
+    out = pl.pallas_call(
+        _pip_one_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((4, be), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(points, edges_t)
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "be", "interpret"))
+def crossings_gathered(points: jnp.ndarray, edges_t: jnp.ndarray,
+                       bp: int = DEF_BP, be: int = DEF_BE,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Crossing counts where each point brings its own edges [N, 4, E]."""
+    n = points.shape[0]
+    e = edges_t.shape[2]
+    grid = (n // bp, e // be)
+    out = pl.pallas_call(
+        _pip_gathered_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((bp, 4, be), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(points, edges_t)
+    return out[:, 0]

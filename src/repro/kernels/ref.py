@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic references: every Pallas kernel in this package must
+be allclose-equal to the corresponding function here (tests sweep shapes and
+dtypes).  They are also the implementations used on non-TPU backends when
+``REPRO_KERNELS=ref``.
+
+Crossing-number test (paper §III-A, Shimrat '62): a point is inside a polygon
+iff a ray extending in +x crosses the boundary an odd number of times.  Edge
+(x1,y1)-(x2,y2) is crossed iff the edge straddles the point's y (half-open
+rule: ``(y1 > py) != (y2 > py)``) and the intersection lies right of the
+point.  The right-of test is done in the multiplication-only form
+
+    (px - x1) * (y2 - y1)  <  (py - y1) * (x2 - x1)      [sign-adjusted]
+
+which avoids the division of the textbook form — important both for TPU VPU
+throughput and to keep degenerate (padding) edges well-defined.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def crossings_one(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Crossing counts of N points against one shared edge table.
+
+    Args:
+      points: [N, 2] float.
+      edges:  [E, 4] float (x1, y1, x2, y2); zero-length edges are ignored.
+    Returns:
+      [N] int32 crossing counts.
+    """
+    px = points[:, 0:1]
+    py = points[:, 1:2]
+    x1, y1, x2, y2 = (edges[None, :, 0], edges[None, :, 1],
+                      edges[None, :, 2], edges[None, :, 3])
+    straddle = (y1 > py) != (y2 > py)
+    lhs = (px - x1) * (y2 - y1)
+    rhs = (py - y1) * (x2 - x1)
+    cross = straddle & ((lhs < rhs) == (y2 > y1))
+    return jnp.sum(cross, axis=1).astype(jnp.int32)
+
+
+def pip_one(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Inside mask of N points against one polygon edge table."""
+    return (crossings_one(points, edges) & 1).astype(jnp.bool_)
+
+
+def crossings_gathered(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Crossing counts where each point has its own edge table.
+
+    Args:
+      points: [N, 2] float.
+      edges:  [N, E, 4] float.
+    Returns:
+      [N] int32.
+    """
+    px = points[:, 0:1]
+    py = points[:, 1:2]
+    x1, y1, x2, y2 = (edges[..., 0], edges[..., 1],
+                      edges[..., 2], edges[..., 3])
+    straddle = (y1 > py) != (y2 > py)
+    lhs = (px - x1) * (y2 - y1)
+    rhs = (py - y1) * (x2 - x1)
+    cross = straddle & ((lhs < rhs) == (y2 > y1))
+    return jnp.sum(cross, axis=1).astype(jnp.int32)
+
+
+def pip_gathered(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    return (crossings_gathered(points, edges) & 1).astype(jnp.bool_)
+
+
+def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray) -> jnp.ndarray:
+    """[N, M] int8 membership of N points in M shared boxes (open intervals).
+
+    boxes: [M, 4] = (xmin, xmax, ymin, ymax).  This is the paper's sparse
+    outer-product expression ``A_in`` realized densely.
+    """
+    px, py = points[:, 0:1], points[:, 1:2]
+    m = ((px > boxes[None, :, 0]) & (px < boxes[None, :, 1]) &
+         (py > boxes[None, :, 2]) & (py < boxes[None, :, 3]))
+    return m.astype(jnp.int8)
+
+
+def bbox_mask_gathered(points: jnp.ndarray, boxes: jnp.ndarray) -> jnp.ndarray:
+    """[N, C] int8 membership where each point has its own C boxes [N, C, 4]."""
+    px, py = points[:, 0:1], points[:, 1:2]
+    m = ((px > boxes[..., 0]) & (px < boxes[..., 1]) &
+         (py > boxes[..., 2]) & (py < boxes[..., 3]))
+    return m.astype(jnp.int8)
+
+
+def bbox_count_select(points: jnp.ndarray, boxes: jnp.ndarray):
+    """Fused membership count + single-candidate select over gathered boxes.
+
+    Args:
+      points: [N, 2]; boxes: [N, C, 4] (padded boxes must be empty, e.g.
+        xmin > xmax, so they never match).
+    Returns:
+      count: [N] int32 — number of boxes containing the point.
+      sel:   [N] int32 — largest box slot containing the point, -1 if none.
+             (When count == 1 this is *the* containing slot.)
+    """
+    m = bbox_mask_gathered(points, boxes)
+    count = jnp.sum(m.astype(jnp.int32), axis=1)
+    c = boxes.shape[1]
+    iota = jnp.arange(c, dtype=jnp.int32)[None, :]
+    sel = jnp.max(jnp.where(m != 0, iota, -1), axis=1)
+    return count, sel.astype(jnp.int32)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below assumes 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins — no weight is ever allocated.
+
+For each cell we record:
+  * memory_analysis()  — bytes per device (proves the cell fits),
+  * cost_analysis()    — HLO FLOPs / bytes accessed (roofline numerator),
+  * collective bytes   — parsed from the compiled HLO (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute),
+into a JSON report consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import RunConfig, ShapeConfig, shapes_for
+from repro.launch.hlo_cost import cost_of
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, input_specs
+from repro.models.module import abstract_params, param_bytes, param_count
+from repro.optim import adamw
+from repro.runtime.steps import make_prefill_step, make_serve_step, \
+    make_train_step
+from repro.sharding.rules import cache_shardings, input_shardings, \
+    param_shardings
+
+def abstract_with_sharding(specs_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs_tree, shardings_tree)
+
+
+def run_cell(arch: str, shape: ShapeConfig, mesh, run: RunConfig,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        p_abs = model.abstract_params()
+        p_sh = param_shardings(model.specs, mesh)
+        params = abstract_with_sharding(p_abs, p_sh)
+        in_specs = input_specs(cfg, shape, model=model)
+
+        if shape.kind == "train":
+            opt_abs = jax.eval_shape(adamw.init, p_abs)
+            opt_sh = adamw.OptState(
+                step=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()),
+                m=p_sh, v=p_sh)
+            opt = abstract_with_sharding(opt_abs, opt_sh)
+            batch = abstract_with_sharding(
+                in_specs, input_shardings(mesh, in_specs))
+            step = make_train_step(model, run, mesh)
+            lowered = jax.jit(step, out_shardings=(p_sh, opt_sh, None)) \
+                .lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            batch = abstract_with_sharding(
+                in_specs, input_shardings(mesh, in_specs))
+            step = make_prefill_step(model, run, mesh)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            tokens = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32,
+                sharding=jax.tree.leaves(input_shardings(
+                    mesh, {"t": in_specs["tokens"]}))[0])
+            cache = abstract_with_sharding(
+                in_specs["cache"],
+                cache_shardings(mesh, in_specs["cache"],
+                                shape.global_batch))
+            step = make_serve_step(model, run, mesh)
+            lowered = jax.jit(step).lower(params, tokens, cache)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # XLA's cost_analysis counts while bodies ONCE; the walker multiplies
+    # them by their known trip counts (launch/hlo_cost.py).
+    walked = cost_of(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": dict(zip(mesh.axis_names, (int(v) for v in
+                                           mesh.devices.shape))),
+        "n_devices": int(mesh.devices.size),
+        "params": param_count(model.specs),
+        "param_bytes": param_bytes(model.specs),
+        "flops_per_device": walked["flops"],
+        "bytes_accessed_per_device": walked["bytes"],
+        "collective_bytes_per_device": walked["collective_bytes"],
+        "collective_counts": walked["collective_counts"],
+        "xla_cost_analysis": {
+            "flops_body_once": float(cost.get("flops", 0.0)),
+            "bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_size": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size": int(getattr(
+                mem, "generated_code_size_in_bytes", 0)),
+        },
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "ok": True,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape.name} x {rec['mesh']}: "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_accessed_per_device']:.3e} "
+              f"coll={sum(rec['collective_bytes_per_device'].values()):.3e}B "
+              f"mem(temp)={rec['memory']['temp_size']/2**30:.2f}GiB "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s", flush=True)
+        print("  memory_analysis:", {k: f"{v/2**30:.2f}GiB"
+                                     for k, v in rec["memory"].items()},
+              flush=True)
+    return rec
+
+
+def default_run(shape: ShapeConfig) -> RunConfig:
+    return RunConfig(remat="full", attn_chunk_q=1024, attn_chunk_kv=1024,
+                     ssm_chunk=256)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("single_pod", make_production_mesh(multi_pod=False)))
+    if not args.single_pod_only:
+        meshes.append(("multi_pod", make_production_mesh(multi_pod=True)))
+
+    archs = list(ARCH_NAMES) if args.all or not args.arch else [args.arch]
+    results = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = shapes_for(cfg)
+            if args.shape:
+                shapes = [s for s in shapes if s.name == args.shape]
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, mesh, default_run(shape))
+                except Exception as e:  # noqa: BLE001 — report, don't die
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape.name,
+                           "mesh_name": mesh_name, "ok": False,
+                           "error": repr(e)}
+                rec["mesh_name"] = mesh_name
+                results.append(rec)
+
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n[dryrun] {n_ok}/{len(results)} cells compiled OK")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    if n_ok != len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+Runs the fault-tolerant driver (checkpoint/restart, straggler watch) on the
+current backend.  On a real TPU fleet the same entry point runs under
+multi-host jax.distributed; XLA latency-hiding flags for compute/comm
+overlap are applied here (launcher-level, per DESIGN.md §5).
+"""
+import os
+
+# Compute/communication overlap: enable XLA's latency-hiding scheduler on
+# TPU (no-op on CPU).  Must be set before jax import.
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true")
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM, make_source
+from repro.models.model import build_model
+from repro.models.module import init_params, param_count
+from repro.optim import adamw
+from repro.runtime.driver import DriverConfig, train_loop
+from repro.runtime.steps import make_train_step
+from repro.sharding.rules import param_shardings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=("cosine", "wsd", "const"))
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default="none",
+                    choices=("none", "dots", "full"))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--geo-enrich", action="store_true",
+                    help="join synthetic locations onto census blocks in "
+                         "the pipeline (the paper's technique)")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced \
+        else get_config(args.arch)
+    # MiniCPM trains with WSD (its signature feature).
+    sched = "wsd" if args.arch == "minicpm-2b" else args.schedule
+    run = RunConfig(remat=args.remat, learning_rate=args.lr,
+                    schedule=sched, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 20, 1),
+                    microbatch=args.microbatch,
+                    attn_chunk_q=min(128, args.seq),
+                    attn_chunk_kv=min(128, args.seq),
+                    ssm_chunk=min(64, args.seq), seed=args.seed)
+
+    model = build_model(cfg)
+    params = init_params(model.specs, jax.random.key(args.seed))
+    opt = adamw.init(params)
+    print(f"[train] {cfg.name}: {param_count(model.specs):,} params, "
+          f"{len(jax.devices())} devices")
+
+    geo = None
+    if args.geo_enrich:
+        from repro.core.cells import build_cell_covering
+        from repro.core.fast import FastConfig, FastIndex
+        from repro.core.synth import build_synth_census
+        sc = build_synth_census(seed=1)
+        cov = build_cell_covering(sc.census, max_level=8)
+        geo = (FastIndex.from_covering(cov, sc.census, gbits=4),
+               FastConfig(mode="approx"))
+        print(f"[train] geo enrichment on: {len(cov.lo)} cells")
+
+    class Shape:
+        global_batch = args.batch
+        seq_len = args.seq
+    src = make_source(cfg, Shape, seed=args.seed, geo=geo)
+
+    step_fn = jax.jit(make_train_step(model, run))
+    dcfg = DriverConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir)
+    params, opt, hist = train_loop(step_fn, params, opt, src, dcfg)
+    print(f"[train] done: loss {hist['loss'][0]:.4f} -> "
+          f"{hist['loss'][-1]:.4f}, {hist['steps_run']} steps, "
+          f"{hist['restarts']} restarts, {hist['stragglers']} stragglers")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding windows, cross-attention, MLA.
+
+Training/prefill uses a blockwise memory-efficient formulation (online
+softmax over KV chunks inside a ``lax.scan``) so the [S, S] score matrix is
+never materialized — this is what makes 32k prefill fit HBM and keeps the
+roofline memory term sane.  Decode uses single-token attention against a KV
+cache: full, rolling-window (SWA), or compressed-latent (MLA, with the
+matrix-absorbed query path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACT_DTYPE, BATCH, apply_rope, dense, \
+    dense_spec, rmsnorm, rmsnorm_spec, rope_tables, shard_act
+from repro.models.module import P
+
+NEG_INF = -1.0e30
+
+
+# --------------------------------------------------------------------------
+# Blockwise attention (train / prefill)
+# --------------------------------------------------------------------------
+def blockwise_attn(q, k, v, *, causal: bool, window: Optional[int] = None,
+                   chunk_q: int = 1024, chunk_kv: int = 1024,
+                   q_offset: int = 0):
+    """Online-softmax attention over KV chunks.
+
+    q: [B, S, H, D]; k, v: [B, T, KH, D] with H % KH == 0.
+    Returns [B, S, H, D] in q.dtype.  Scores/stats are f32.
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]            # may differ from d (MLA)
+    g = h // kh
+    cq = min(chunk_q, s)
+    ck = min(chunk_kv, t)
+    nq = -(-s // cq)
+    nk = -(-t // ck)
+    # Pad sequence dims to chunk multiples (masked out below).
+    if nq * cq != s:
+        q = jnp.pad(q, ((0, 0), (0, nq * cq - s), (0, 0), (0, 0)))
+    if nk * ck != t:
+        k = jnp.pad(k, ((0, 0), (0, nk * ck - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, nk * ck - t), (0, 0), (0, 0)))
+
+    scale = 1.0 / math.sqrt(d)
+    qb = q.reshape(b, nq, cq, kh, g, d)
+    kb = jnp.moveaxis(k.reshape(b, nk, ck, kh, d), 1, 0)     # [nk, b, ck,...]
+    vb = jnp.moveaxis(v.reshape(b, nk, ck, kh, dv), 1, 0)
+    # Keep batch + head sharding through the chunk reshapes (GSPMD loses it).
+    qb = shard_act(qb, BATCH, None, None, "model", None, None)
+    kb = shard_act(kb, None, BATCH, None, "model", None)
+    vb = shard_act(vb, None, BATCH, None, "model", None)
+
+    qpos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)    # [nq, cq]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, jblk = xs
+        sc = jnp.einsum("bnckgd,bjkd->bnckgj", qb, kc,
+                        preferred_element_type=jnp.float32) * scale
+        kpos = jblk * ck + jnp.arange(ck)                    # [ck]
+        valid = kpos[None, None, :] < t
+        ok = valid
+        if causal:
+            ok = ok & (kpos[None, None, :] <= qpos[:, :, None])
+        if window is not None:
+            ok = ok & (kpos[None, None, :] > qpos[:, :, None] - window)
+        # ok: [nq, cq, ck] -> broadcast to [b, nq, cq, kh, g, ck]
+        sc = jnp.where(ok[None, :, :, None, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        # Probabilities materialize in bf16 only (flash-attention practice):
+        # the row-sum l accumulates in f32 via the reduce, never as an f32
+        # [.., cq, ck] buffer — halves the dominant HBM-traffic term.
+        p = jnp.exp(sc - m_new[..., None]).astype(vc.dtype)
+        r = jnp.exp(m - m_new)
+        l_new = l * r + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        acc_new = acc * r[..., None] + jnp.einsum(
+            "bnckgj,bjkd->bnckgd", p, vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = shard_act(jnp.full((b, nq, cq, kh, g), NEG_INF, jnp.float32),
+                   BATCH, None, None, "model", None)
+    l0 = shard_act(jnp.zeros((b, nq, cq, kh, g), jnp.float32),
+                   BATCH, None, None, "model", None)
+    a0 = shard_act(jnp.zeros((b, nq, cq, kh, g, dv), jnp.float32),
+                   BATCH, None, None, "model", None, None)
+    # Checkpoint the kv-chunk body: without it the backward pass saves the
+    # f32 [.., cq, ck] score tile for EVERY chunk step (gigabytes per layer);
+    # with it only the (m, l, acc) carries are stacked.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, nq * cq, h, dv)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attn(q, k_cache, v_cache, valid_len, *,
+                window: Optional[int] = None, cache_pos=None):
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, D]; caches [B, T, KH, D]; valid_len [] or [B] — number of
+    valid cache entries.  For rolling SWA caches pass ``cache_pos`` [B, T]
+    giving each slot's absolute position (-1 = empty).
+    """
+    b, _, h, d = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kh, g, d)
+    sc = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                    preferred_element_type=jnp.float32) * scale
+    if cache_pos is not None:
+        ok = cache_pos[:, None, None, :] >= 0
+    else:
+        slot = jnp.arange(t)
+        vl = jnp.asarray(valid_len)
+        vl = vl[:, None, None, None] if vl.ndim else vl
+        ok = slot[None, None, None, :] < vl
+    sc = jnp.where(ok, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (self / cross)
+# --------------------------------------------------------------------------
+def gqa_spec(cfg, d_in=None, kv_d_in=None):
+    d = d_in or cfg.d_model
+    kv_d = kv_d_in or d
+    hd = cfg.hd
+    return {
+        "wq": dense_spec(d, cfg.n_heads * hd, ("embed", "heads"),
+                         bias=cfg.qkv_bias),
+        "wk": dense_spec(kv_d, cfg.n_kv_heads * hd, ("embed", "heads"),
+                         bias=cfg.qkv_bias),
+        "wv": dense_spec(kv_d, cfg.n_kv_heads * hd, ("embed", "heads"),
+                         bias=cfg.qkv_bias),
+        "wo": dense_spec(cfg.n_heads * hd, cfg.d_model, ("heads", "embed")),
+    }
+
+
+def gqa_project_qkv(params, cfg, x, kv_x=None, rope=None):
+    """x [B,S,D] -> q [B,S,H,hd], k/v [B,T,KH,hd] (rope applied if given)."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    t = kv_x.shape[1]
+    hd = cfg.hd
+    q = dense(params["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(params["wk"], kv_x).reshape(b, t, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], kv_x).reshape(b, t, cfg.n_kv_heads, hd)
+    q = shard_act(q, BATCH, None, "model", None)
+    k = shard_act(k, BATCH, None, "model", None)
+    v = shard_act(v, BATCH, None, "model", None)
+    if rope is not None:
+        sin, cos = rope
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def repeat_kv(k, n_heads):
+    """Expand KV heads to n_heads so the head axis TP-shards even when
+    n_kv_heads < the model-axis extent (train/prefill only — the decode
+    cache keeps grouped KV heads).  FLOPs are unchanged; the repeated KV is
+    re-sharded over the full head axis."""
+    b, t, kh, d = k.shape
+    g = n_heads // kh
+    if g == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, kh, g, d))
+    return shard_act(k.reshape(b, t, kh * g, d), BATCH, None, "model", None)
+
+
+def gqa_self_attn(params, cfg, x, *, positions, chunk_q, chunk_kv,
+                  causal=True):
+    sin, cos = rope_tables(positions, cfg.hd, cfg.rope_theta)
+    q, k, v = gqa_project_qkv(params, cfg, x, rope=(sin, cos))
+    k = repeat_kv(k, cfg.n_heads)
+    v = repeat_kv(v, cfg.n_heads)
+    o = blockwise_attn(q, k, v, causal=causal, window=cfg.sliding_window,
+                       chunk_q=chunk_q, chunk_kv=chunk_kv)
+    b, s = x.shape[:2]
+    return dense(params["wo"], o.reshape(b, s, -1))
+
+
+def gqa_decode_self_attn(params, cfg, x, k_cache, v_cache, pos):
+    """x [B,1,D]; per-layer caches [B,T,KH,hd]; pos [] absolute position.
+    Returns (out [B,1,D], k_cache, v_cache updated).  For SWA the cache is a
+    rolling buffer of length == window."""
+    b = x.shape[0]
+    hd = cfg.hd
+    sin, cos = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = dense(params["wq"], x).reshape(b, 1, cfg.n_heads, hd)
+    k = dense(params["wk"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    t = k_cache.shape[1]
+    slot = (pos % t) if cfg.sliding_window else jnp.minimum(pos, t - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    if cfg.sliding_window:
+        # Rolling buffer: slot i holds absolute position pos - ((slot-i) % t),
+        # valid iff non-negative.
+        idx = jnp.arange(t)
+        age = (slot - idx) % t
+        cache_pos = jnp.where(age <= jnp.minimum(pos, t - 1), pos - age, -1)
+        cache_pos = jnp.broadcast_to(cache_pos[None, :], (b, t))
+        o = decode_attn(q, k_cache, v_cache, None, cache_pos=cache_pos)
+    else:
+        o = decode_attn(q, k_cache, v_cache, pos + 1)
+    out = dense(params["wo"], o.reshape(b, 1, -1))
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+def mla_spec(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_d = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wdq": dense_spec(d, cfg.q_lora, ("embed", "q_lora")),
+        "q_norm": rmsnorm_spec(cfg.q_lora),
+        "wuq": dense_spec(cfg.q_lora, h * qk_d, ("q_lora", "heads")),
+        "wdkv": dense_spec(d, cfg.kv_lora, ("embed", "kv_lora")),
+        "kv_norm": rmsnorm_spec(cfg.kv_lora),
+        "wuk": dense_spec(cfg.kv_lora, h * cfg.qk_nope_dim,
+                          ("kv_lora", "heads")),
+        "wuv": dense_spec(cfg.kv_lora, h * cfg.v_head_dim,
+                          ("kv_lora", "heads")),
+        "wkr": dense_spec(d, cfg.qk_rope_dim, ("embed", None)),
+        "wo": dense_spec(h * cfg.v_head_dim, d, ("heads", "embed")),
+    }
+
+
+def _mla_qkr(params, cfg, x, positions):
+    """Shared q / rope-key computation. x [B,S,D]."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(params["q_norm"], dense(params["wdq"], x), cfg.norm_eps)
+    q = shard_act(dense(params["wuq"], cq), BATCH, None, "model").reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope = q[..., :cfg.qk_nope_dim]
+    q_rope = q[..., cfg.qk_nope_dim:]
+    sin, cos = rope_tables(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    kr = dense(params["wkr"], x).reshape(b, s, 1, cfg.qk_rope_dim)
+    kr = apply_rope(kr, sin, cos)
+    return q_nope, q_rope, kr, (sin, cos)
+
+
+def mla_self_attn(params, cfg, x, *, positions, chunk_q, chunk_kv):
+    """Training/prefill MLA in the expanded (naive) form."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, kr, _ = _mla_qkr(params, cfg, x, positions)
+    ckv = rmsnorm(params["kv_norm"], dense(params["wdkv"], x), cfg.norm_eps)
+    k_nope = dense(params["wuk"], ckv).reshape(b, s, h, cfg.qk_nope_dim)
+    v = dense(params["wuv"], ckv).reshape(b, s, h, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr, (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    q = shard_act(q, BATCH, None, "model", None)
+    k = shard_act(k, BATCH, None, "model", None)
+    v = shard_act(v, BATCH, None, "model", None)
+    o = blockwise_attn(q, k, v, causal=True, chunk_q=chunk_q,
+                       chunk_kv=chunk_kv)
+    return dense(params["wo"], o.reshape(b, s, -1))
+
+
+def mla_decode_self_attn(params, cfg, x, ckv, kr, pos):
+    """Decode with the compressed cache (c_kv + k_rope) and absorbed mats.
+
+    ckv: [B,T,kv_lora]; kr: [B,T,rope_d]; pos: [] absolute position.
+    Scores = q_nope W_uk^T . ckv + q_rope . k_rope;  out = (P . ckv) W_uv.
+    Returns (out [B,1,D], ckv, kr updated).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    q_nope, q_rope, kr_new, _ = _mla_qkr(params, cfg, x, pos[None])
+    ckv_new = rmsnorm(params["kv_norm"], dense(params["wdkv"], x),
+                      cfg.norm_eps)
+    t = ckv.shape[1]
+    slot = jnp.minimum(pos, t - 1)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        ckv, ckv_new.astype(ckv.dtype), slot, 1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        kr, kr_new[:, :, 0].astype(kr.dtype), slot, 1)
+    wuk = params["wuk"]["w"].reshape(cfg.kv_lora, h, cfg.qk_nope_dim)
+    # Absorb W_uk into the query:  [B,1,H,nope] x [C,H,nope] -> [B,H,C]
+    q_abs = jnp.einsum("bshn,chn->bhc", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    sc = jnp.einsum("bhc,btc->bht", q_abs, ckv.astype(jnp.float32))
+    sc = sc + jnp.einsum("bshr,btr->bht", q_rope.astype(jnp.float32),
+                         kr.astype(jnp.float32))
+    sc = sc / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    ok = jnp.arange(t)[None, None, :] < (pos + 1)
+    sc = jnp.where(ok, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    octx = jnp.einsum("bht,btc->bhc", p, ckv.astype(jnp.float32))
+    wuv = params["wuv"]["w"].reshape(cfg.kv_lora, h, cfg.v_head_dim)
+    o = jnp.einsum("bhc,chv->bhv", octx, wuv.astype(jnp.float32))
+    out = dense(params["wo"], o.reshape(b, 1, -1).astype(x.dtype))
+    return out, ckv, kr

@@ -1,0 +1,35 @@
+"""Feed-forward variants: SwiGLU (llama family), squared-ReLU (nemotron),
+GELU (enc-dec)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_spec
+
+
+def ffn_spec(d, d_ff, act: str):
+    if act == "swiglu":
+        return {
+            "w_gate": dense_spec(d, d_ff, ("embed", "mlp")),
+            "w_up": dense_spec(d, d_ff, ("embed", "mlp")),
+            "w_down": dense_spec(d_ff, d, ("mlp", "embed")),
+        }
+    return {
+        "w_up": dense_spec(d, d_ff, ("embed", "mlp")),
+        "w_down": dense_spec(d_ff, d, ("mlp", "embed")),
+    }
+
+
+def ffn(params, x, act: str):
+    if act == "swiglu":
+        g = dense(params["w_gate"], x)
+        u = dense(params["w_up"], x)
+        h = jax.nn.silu(g) * u
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(dense(params["w_up"], x)))
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(params["w_up"], x))
+    else:
+        raise ValueError(act)
+    return dense(params["w_down"], h)

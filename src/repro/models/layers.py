@@ -1,0 +1,129 @@
+"""Shared layers: norms, embeddings, RoPE, activation-sharding helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.models.module import P
+
+ACT_DTYPE = jnp.bfloat16
+
+BATCH = ("pod", "data")
+
+
+def shard_act(x, *parts):
+    """Activation sharding constraint against the ambient (abstract) mesh.
+
+    Axis names absent from the mesh are dropped; entries whose dimension is
+    not divisible by the assigned mesh extent are replicated (e.g. 4 kv
+    heads on a 16-way model axis).  A no-op when no mesh is set (CPU smoke
+    tests) — GSPMD propagation alone loses batch sharding through the
+    scanned/blocked attention reshapes, so the model calls this explicitly
+    at block boundaries.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+
+    def extent(axes):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    spec = []
+    for dim, p in zip(x.shape, parts):
+        if p is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in ((p,) if isinstance(p, str) else p)
+                     if a in names)
+        if axes and dim % extent(axes) == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def rmsnorm_spec(d):
+    return {"scale": P((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def layernorm_spec(d):
+    return {"scale": P((d,), (None,), init="ones"),
+            "bias": P((d,), (None,), init="zeros")}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dt)
+
+
+def embed_spec(vocab, d):
+    return {"table": P((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def embed(params, tokens):
+    return shard_act(params["table"].astype(ACT_DTYPE)[tokens],
+                     BATCH, None, None)
+
+
+def unembed_spec(vocab, d):
+    return {"w": P((d, vocab), ("embed", "vocab"), init="fanin", fan_in=d)}
+
+
+def unembed(params, x):
+    # Logits in f32 for a stable softmax/cross-entropy.
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                      params["w"].astype(jnp.float32))
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float):
+    """positions [S] (or [B, S]) -> (sin, cos) [..., S, dim/2] f32."""
+    assert dim % 2 == 0
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray):
+    """x [..., S, H, D]; sin/cos [S, D/2] or [B, S, D/2] (broadcast over H)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if sin.ndim == 2:   # [S, D/2] -> broadcast over batch and heads
+        s = sin[None, :, None, :]
+        c = cos[None, :, None, :]
+    else:               # [B, S, D/2]
+        s = sin[:, :, None, :]
+        c = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def dense_spec(d_in, d_out, axes, bias=False, init="fanin"):
+    s = {"w": P((d_in, d_out), axes, init=init, fan_in=d_in)}
+    if bias:
+        s["b"] = P((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def dense(params, x):
+    y = jnp.einsum("...d,df->...f", x, params["w"].astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,580 @@
+"""Model assembly: config -> (specs, forward, init_cache, decode_step).
+
+All stacks scan over homogeneous groups (see transformer.py); caches are
+stacked along the scan dimension so decode steps scan too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import ssm, xlstm
+from repro.models import transformer as tf
+from repro.models.layers import ACT_DTYPE, dense, embed, embed_spec, \
+    rmsnorm, rmsnorm_spec, unembed, unembed_spec
+from repro.models.module import P, abstract_params, stack
+from repro.models.moe import moe_ffn
+
+CACHE_DTYPE = tf.CACHE_DTYPE
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    specs: Any
+    forward: Callable      # (params, run, batch, mesh=None) -> (logits, aux)
+    init_cache: Callable   # (batch, max_len) -> cache pytree (zeros)
+    decode_step: Callable  # (params, run, tokens[B,1], cache, mesh=None)
+                           #   -> (logits [B,1,V], cache)
+    prefill: Optional[Callable] = None  # (params, run, tokens, max_len) ->
+                                        #   (last logits, cache)
+
+    def cache_specs(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def abstract_params(self):
+        return abstract_params(self.specs)
+
+
+def _head_specs(cfg):
+    s = {"embed": embed_spec(cfg.vocab, cfg.d_model),
+         "final_norm": rmsnorm_spec(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = unembed_spec(cfg.vocab, cfg.d_model)
+    return s
+
+
+def _logits(params, cfg, x):
+    from repro.models.layers import BATCH, shard_act
+    x = shard_act(x, BATCH, None, None)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        out = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                         params["embed"]["table"].astype(jnp.float32))
+    else:
+        out = unembed(params["unembed"], x)
+    return shard_act(out, BATCH, None, "model")
+
+
+def _positions(s):
+    return jnp.arange(s, dtype=jnp.int32)
+
+
+# ------------------------------------------------------------------ dense
+def build_dense(cfg: ModelConfig) -> Model:
+    specs = dict(_head_specs(cfg))
+    specs["blocks"] = stack(tf.dense_block_spec(cfg), cfg.n_layers)
+
+    def forward(params, run, batch, mesh=None):
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens)
+        pos = _positions(tokens.shape[1])
+        blk = _wrap_remat(
+            lambda p, x: tf.dense_block(p, cfg, run, x, pos), run)
+
+        def body(x, p):
+            return blk(p, x), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return _logits(params, cfg, x), {}
+
+    def init_cache(batch, max_len):
+        t = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+            else max_len
+        shape = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, CACHE_DTYPE),
+                "v": jnp.zeros(shape, CACHE_DTYPE),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+        pos = cache["pos"]
+
+        def body(x, xs_):
+            p, kc, vc = xs_
+            x, kc, vc = tf.dense_block_decode(p, cfg, x, kc, vc, pos)
+            return x, (kc, vc)
+        x, (k, v) = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["k"], cache["v"]))
+        return _logits(params, cfg, x), {"k": k, "v": v, "pos": pos + 1}
+
+    def prefill(params, run, tokens, max_len):
+        """Run the prompt once, returning (last-position logits, cache)
+        ready for decode_step — the serving entry point."""
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        pos = _positions(s)
+        t = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+            else max_len
+
+        def body(x, p):
+            from repro.models.attention import gqa_project_qkv, \
+                blockwise_attn, repeat_kv
+            from repro.models.layers import rope_tables, dense
+            h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+            sin, cos = rope_tables(pos, cfg.hd, cfg.rope_theta)
+            q, k, v = gqa_project_qkv(p["attn"], cfg, h, rope=(sin, cos))
+            o = blockwise_attn(q, repeat_kv(k, cfg.n_heads),
+                               repeat_kv(v, cfg.n_heads), causal=True,
+                               window=cfg.sliding_window,
+                               chunk_q=run.attn_chunk_q,
+                               chunk_kv=run.attn_chunk_kv)
+            x = x + dense(p["attn"]["wo"], o.reshape(b, s, -1))
+            from repro.models.ffn import ffn as ffn_
+            x = x + ffn_(p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps),
+                         cfg.act)
+            if cfg.sliding_window and s > t:
+                k, v = k[:, -t:], v[:, -t:]
+            pad = t - min(s, t)
+            kc = jnp.pad(k.astype(CACHE_DTYPE),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v.astype(CACHE_DTYPE),
+                         ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, (kc, vc)
+        x, (k, v) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": k, "v": v,
+                 "pos": jnp.asarray(s, jnp.int32)}
+        return _logits(params, cfg, x[:, -1:, :]), cache
+
+    return Model(cfg, specs, forward, init_cache, decode_step,
+                 prefill=prefill)
+
+
+# -------------------------------------------------------------------- moe
+def build_moe(cfg: ModelConfig) -> Model:
+    specs = dict(_head_specs(cfg))
+    fd = cfg.first_dense_layers
+    if fd:
+        specs["dense_blocks"] = stack(tf.dense_block_spec(cfg), fd)
+    specs["blocks"] = stack(tf.moe_block_spec(cfg), cfg.n_layers - fd)
+
+    def forward(params, run, batch, mesh=None):
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens)
+        pos = _positions(tokens.shape[1])
+        if fd:
+            dblk = _wrap_remat(
+                lambda p, x: tf.dense_block(p, cfg, run, x, pos), run)
+            x, _ = jax.lax.scan(lambda x, p: (dblk(p, x), None), x,
+                                params["dense_blocks"])
+        mblk = _wrap_remat(
+            lambda p, x: tf.moe_block(p, cfg, run, x, pos, mesh), run,
+            has_aux=True)
+
+        def body(x, p):
+            x, aux = mblk(p, x)
+            return x, (aux["lb_loss"], aux["dropped"])
+        x, (lb, dropped) = jax.lax.scan(body, x, params["blocks"])
+        aux = {"lb_loss": jnp.mean(lb), "dropped": jnp.sum(dropped)}
+        return _logits(params, cfg, x), aux
+
+    def init_cache(batch, max_len):
+        n = cfg.n_layers - fd
+        c: dict = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.mla:
+            c["ckv"] = jnp.zeros((n, batch, max_len, cfg.kv_lora),
+                                 CACHE_DTYPE)
+            c["kr"] = jnp.zeros((n, batch, max_len, cfg.qk_rope_dim),
+                                CACHE_DTYPE)
+        else:
+            t = min(max_len, cfg.sliding_window) if cfg.sliding_window \
+                else max_len
+            shape = (n, batch, t, cfg.n_kv_heads, cfg.hd)
+            c["k"] = jnp.zeros(shape, CACHE_DTYPE)
+            c["v"] = jnp.zeros(shape, CACHE_DTYPE)
+        if fd:
+            shape = (fd, batch, max_len, cfg.n_kv_heads, cfg.hd)
+            c["dense_k"] = jnp.zeros(shape, CACHE_DTYPE)
+            c["dense_v"] = jnp.zeros(shape, CACHE_DTYPE)
+        return c
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+        pos = cache["pos"]
+        new = {"pos": pos + 1}
+        if fd:
+            def dbody(x, xs_):
+                p, kc, vc = xs_
+                x, kc, vc = tf.dense_block_decode(p, cfg, x, kc, vc, pos)
+                return x, (kc, vc)
+            x, (dk, dv) = jax.lax.scan(
+                dbody, x, (params["dense_blocks"], cache["dense_k"],
+                           cache["dense_v"]))
+            new["dense_k"], new["dense_v"] = dk, dv
+
+        if cfg.mla:
+            def mbody(x, xs_):
+                p, ckv, kr = xs_
+                x, nc = tf.moe_block_decode(p, cfg, x,
+                                            {"ckv": ckv, "kr": kr}, pos,
+                                            mesh)
+                return x, (nc["ckv"], nc["kr"])
+            x, (ckv, kr) = jax.lax.scan(
+                mbody, x, (params["blocks"], cache["ckv"], cache["kr"]))
+            new["ckv"], new["kr"] = ckv, kr
+        else:
+            def mbody(x, xs_):
+                p, kc, vc = xs_
+                x, nc = tf.moe_block_decode(p, cfg, x, {"k": kc, "v": vc},
+                                            pos, mesh)
+                return x, (nc["k"], nc["v"])
+            x, (k, v) = jax.lax.scan(
+                mbody, x, (params["blocks"], cache["k"], cache["v"]))
+            new["k"], new["v"] = k, v
+        return _logits(params, cfg, x), new
+
+    return Model(cfg, specs, forward, init_cache, decode_step)
+
+
+# -------------------------------------------------------------------- vlm
+def build_vlm(cfg: ModelConfig) -> Model:
+    k = cfg.cross_attn_every
+    assert cfg.n_layers % k == 0
+    g = cfg.n_layers // k
+    group_spec = {"selfs": stack(tf.dense_block_spec(cfg), k - 1),
+                  "cross": tf.cross_block_spec(cfg)}
+    specs = dict(_head_specs(cfg))
+    specs["groups"] = stack(group_spec, g, axis_name="groups")
+
+    def forward(params, run, batch, mesh=None):
+        tokens = batch["tokens"]
+        img = batch["img"].astype(ACT_DTYPE)
+        x = embed(params["embed"], tokens)
+        pos = _positions(tokens.shape[1])
+        sblk = _wrap_remat(
+            lambda p, x: tf.dense_block(p, cfg, run, x, pos), run)
+
+        def group(x, p):
+            x, _ = jax.lax.scan(lambda x, pp: (sblk(pp, x), None), x,
+                                p["selfs"])
+            kv = tf.cross_img_kv(p["cross"], cfg, img)
+            x = tf.cross_block(p["cross"], cfg, run, x, kv)
+            return x, None
+        x, _ = jax.lax.scan(group, x, params["groups"])
+        return _logits(params, cfg, x), {}
+
+    def init_cache(batch, max_len):
+        shape = (g, k - 1, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        ishape = (g, batch, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, CACHE_DTYPE),
+                "v": jnp.zeros(shape, CACHE_DTYPE),
+                "img_k": jnp.zeros(ishape, CACHE_DTYPE),
+                "img_v": jnp.zeros(ishape, CACHE_DTYPE),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+        pos = cache["pos"]
+
+        def group(x, xs_):
+            p, kc, vc, ik, iv = xs_
+
+            def sbody(x, ys_):
+                pp, kk, vv = ys_
+                x, kk, vv = tf.dense_block_decode(pp, cfg, x, kk, vv, pos)
+                return x, (kk, vv)
+            x, (kc, vc) = jax.lax.scan(sbody, x, (p["selfs"], kc, vc))
+            x = tf.cross_block_decode(p["cross"], cfg, x, ik, iv)
+            return x, (kc, vc)
+        x, (k, v) = jax.lax.scan(group, x,
+                                 (params["groups"], cache["k"], cache["v"],
+                                  cache["img_k"], cache["img_v"]))
+        return _logits(params, cfg, x), {"k": k, "v": v,
+                                         "img_k": cache["img_k"],
+                                         "img_v": cache["img_v"],
+                                         "pos": pos + 1}
+
+    return Model(cfg, specs, forward, init_cache, decode_step)
+
+
+# ----------------------------------------------------------------- encdec
+def build_encdec(cfg: ModelConfig) -> Model:
+    dec_spec = {
+        "self_norm": rmsnorm_spec(cfg.d_model),
+        "self": tf.gqa_spec(cfg),
+        "cross_norm": rmsnorm_spec(cfg.d_model),
+        "cross": tf.gqa_spec(cfg),
+        "ffn_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": tf.ffn_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+    specs = dict(_head_specs(cfg))
+    specs["enc_blocks"] = stack(tf.dense_block_spec(cfg), cfg.enc_layers)
+    specs["enc_norm"] = rmsnorm_spec(cfg.d_model)
+    specs["dec_blocks"] = stack(dec_spec, cfg.n_layers)
+
+    def encode(params, run, frames):
+        pos = _positions(frames.shape[1])
+        blk = _wrap_remat(
+            lambda p, x: tf.dense_block_bidir(p, cfg, run, x, pos), run)
+        x, _ = jax.lax.scan(lambda x, p: (blk(p, x), None), frames,
+                            params["enc_blocks"])
+        return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    def dec_block(p, x, enc_out, pos, run):
+        x = x + tf.gqa_self_attn(p["self"], cfg,
+                                 rmsnorm(p["self_norm"], x, cfg.norm_eps),
+                                 positions=pos, chunk_q=run.attn_chunk_q,
+                                 chunk_kv=run.attn_chunk_kv)
+        h = rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        q, kk, vv = tf.gqa_project_qkv(p["cross"], cfg, h, kv_x=enc_out)
+        o = tf.blockwise_attn(q, kk, vv, causal=False,
+                              chunk_q=run.attn_chunk_q,
+                              chunk_kv=run.attn_chunk_kv)
+        b, s = x.shape[:2]
+        x = x + dense(p["cross"]["wo"], o.reshape(b, s, -1))
+        x = x + tf.ffn(p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps),
+                       cfg.act)
+        return x
+
+    def forward(params, run, batch, mesh=None):
+        frames = batch["frames"].astype(ACT_DTYPE)
+        tokens = batch["tokens"]
+        enc_out = encode(params, run, frames)
+        x = embed(params["embed"], tokens)
+        pos = _positions(tokens.shape[1])
+        blk = _wrap_remat(
+            lambda p, x: dec_block(p, x, enc_out, pos, run), run)
+        x, _ = jax.lax.scan(lambda x, p: (blk(p, x), None), x,
+                            params["dec_blocks"])
+        return _logits(params, cfg, x), {}
+
+    def init_cache(batch, max_len):
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        cshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shape, CACHE_DTYPE),
+                "v": jnp.zeros(shape, CACHE_DTYPE),
+                "cross_k": jnp.zeros(cshape, CACHE_DTYPE),
+                "cross_v": jnp.zeros(cshape, CACHE_DTYPE),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+        pos = cache["pos"]
+
+        def body(x, xs_):
+            p, kc, vc, ck, cv = xs_
+            a, kc, vc = tf.gqa_decode_self_attn(
+                p["self"], cfg, rmsnorm(p["self_norm"], x, cfg.norm_eps),
+                kc, vc, pos)
+            x = x + a
+            h = rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+            b = x.shape[0]
+            q = dense(p["cross"]["wq"], h).reshape(b, 1, cfg.n_heads, cfg.hd)
+            o = tf.decode_attn(q, ck, cv, ck.shape[1])
+            x = x + dense(p["cross"]["wo"], o.reshape(b, 1, -1))
+            x = x + tf.ffn(p["ffn"],
+                           rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg.act)
+            return x, (kc, vc)
+        x, (k, v) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        return _logits(params, cfg, x), {"k": k, "v": v,
+                                         "cross_k": cache["cross_k"],
+                                         "cross_v": cache["cross_v"],
+                                         "pos": pos + 1}
+
+    return Model(cfg, specs, forward, init_cache, decode_step)
+
+
+# --------------------------------------------------------------- ssm hybrid
+def build_ssm_hybrid(cfg: ModelConfig) -> Model:
+    k = cfg.shared_attn_every
+    g, tail = divmod(cfg.n_layers, k)
+    group_spec = {"mambas": stack(ssm.mamba2_spec(cfg), k),
+                  "lora": tf.shared_lora_spec(cfg)}
+    specs = dict(_head_specs(cfg))
+    specs["shared"] = tf.shared_attn_spec(cfg)
+    specs["groups"] = stack(group_spec, g, axis_name="groups")
+    if tail:
+        specs["tail"] = stack(ssm.mamba2_spec(cfg), tail)
+
+    def forward(params, run, batch, mesh=None):
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens)
+        pos = _positions(tokens.shape[1])
+        mblk = _wrap_remat(
+            lambda p, x: x + ssm.mamba2(p, cfg, x, chunk=run.ssm_chunk), run)
+
+        def group(x, p):
+            x, _ = jax.lax.scan(lambda x, pp: (mblk(pp, x), None), x,
+                                p["mambas"])
+            x = tf._shared_attn(params["shared"], p["lora"], cfg, run, x,
+                                pos)
+            return x, None
+        x, _ = jax.lax.scan(group, x, params["groups"])
+        if tail:
+            x, _ = jax.lax.scan(lambda x, pp: (mblk(pp, x), None), x,
+                                params["tail"])
+        return _logits(params, cfg, x), {}
+
+    def init_cache(batch, max_len):
+        one = ssm.mamba2_init_state(cfg, batch, cfg.d_model)
+        groups = jax.tree.map(
+            lambda a: jnp.zeros((g, k) + a.shape, a.dtype), one)
+        cache = {"ssm": groups,
+                 "attn_k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                                      cfg.hd), CACHE_DTYPE),
+                 "attn_v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads,
+                                      cfg.hd), CACHE_DTYPE),
+                 "pos": jnp.zeros((), jnp.int32)}
+        if tail:
+            cache["tail_ssm"] = jax.tree.map(
+                lambda a: jnp.zeros((tail,) + a.shape, a.dtype), one)
+        return cache
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+        pos = cache["pos"]
+
+        def group(x, xs_):
+            p, st, kc, vc = xs_
+
+            def mbody(x, ys_):
+                pp, s = ys_
+                y, s = ssm.mamba2_step(pp, cfg, x, s)
+                return x + y, s
+            x, st = jax.lax.scan(mbody, x, (p["mambas"], st))
+            x, kc, vc = tf._shared_attn_decode(params["shared"], p["lora"],
+                                               cfg, x, kc, vc, pos)
+            return x, (st, kc, vc)
+        x, (st, k, v) = jax.lax.scan(
+            group, x, (params["groups"], cache["ssm"], cache["attn_k"],
+                       cache["attn_v"]))
+        new = {"ssm": st, "attn_k": k, "attn_v": v, "pos": pos + 1}
+        if tail:
+            def mbody(x, ys_):
+                pp, s = ys_
+                y, s = ssm.mamba2_step(pp, cfg, x, s)
+                return x + y, s
+            x, ts = jax.lax.scan(mbody, x,
+                                 (params["tail"], cache["tail_ssm"]))
+            new["tail_ssm"] = ts
+        return _logits(params, cfg, x), new
+
+    return Model(cfg, specs, forward, init_cache, decode_step)
+
+
+# ------------------------------------------------------------------ xlstm
+def build_xlstm(cfg: ModelConfig) -> Model:
+    k = cfg.slstm_every
+    specs = dict(_head_specs(cfg))
+    if k:
+        assert cfg.n_layers % k == 0
+        g = cfg.n_layers // k
+        group_spec = {"mlstms": stack(xlstm.mlstm_spec(cfg), k - 1),
+                      "slstm": xlstm.slstm_spec(cfg)}
+        specs["groups"] = stack(group_spec, g, axis_name="groups")
+    else:
+        g = 0
+        specs["blocks"] = stack(xlstm.mlstm_spec(cfg), cfg.n_layers)
+
+    def forward(params, run, batch, mesh=None):
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens)
+        mblk = _wrap_remat(
+            lambda p, x: x + xlstm.mlstm(p, cfg, x, chunk=run.ssm_chunk),
+            run)
+        if k:
+            def group(x, p):
+                x, _ = jax.lax.scan(lambda x, pp: (mblk(pp, x), None), x,
+                                    p["mlstms"])
+                x = x + xlstm.slstm(p["slstm"], cfg, x)
+                return x, None
+            x, _ = jax.lax.scan(group, x, params["groups"])
+        else:
+            x, _ = jax.lax.scan(lambda x, p: (mblk(p, x), None), x,
+                                params["blocks"])
+        return _logits(params, cfg, x), {}
+
+    def init_cache(batch, max_len):
+        m_one = xlstm.mlstm_init_state(cfg, batch)
+        if k:
+            s_one = xlstm.slstm_init_state(cfg, batch)
+            return {"m": jax.tree.map(
+                        lambda a: jnp.zeros((g, k - 1) + a.shape, a.dtype),
+                        m_one),
+                    "s": jax.tree.map(
+                        lambda a: jnp.zeros((g,) + a.shape, a.dtype), s_one),
+                    "pos": jnp.zeros((), jnp.int32)}
+        return {"m": jax.tree.map(
+                    lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype),
+                    m_one),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(params, run, tokens, cache, mesh=None):
+        x = embed(params["embed"], tokens)
+
+        def mbody(x, ys_):
+            pp, s = ys_
+            y, s = xlstm.mlstm_step(pp, cfg, x, s)
+            return x + y, s
+        if k:
+            def group(x, xs_):
+                p, ms, ss_ = xs_
+                x, ms = jax.lax.scan(mbody, x, (p["mlstms"], ms))
+                y, ss_ = xlstm.slstm_step(p["slstm"], cfg, x, ss_)
+                return x + y, (ms, ss_)
+            x, (m, s) = jax.lax.scan(group, x,
+                                     (params["groups"], cache["m"],
+                                      cache["s"]))
+            new = {"m": m, "s": s, "pos": cache["pos"] + 1}
+        else:
+            x, m = jax.lax.scan(mbody, x, (params["blocks"], cache["m"]))
+            new = {"m": m, "pos": cache["pos"] + 1}
+        return _logits(params, cfg, x), new
+
+    return Model(cfg, specs, forward, init_cache, decode_step)
+
+
+# -------------------------------------------------------------- dispatcher
+BUILDERS = {
+    "dense": build_dense,
+    "moe": build_moe,
+    "vlm": build_vlm,
+    "encdec": build_encdec,
+    "ssm_hybrid": build_ssm_hybrid,
+    "xlstm": build_xlstm,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return BUILDERS[cfg.family](cfg)
+
+
+def _wrap_remat(fn, run: RunConfig, has_aux: bool = False):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                model: Optional[Model] = None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    For train/prefill: token batch (+ modality stubs).  For decode: one-token
+    batch + a full cache at seq_len (the dry-run lowers serve_step).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        d: dict = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "train":
+            d["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "vlm":
+            d["img"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_vision), jnp.bfloat16)
+        if cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)
+        return d
+    # decode
+    model = model or build_model(cfg)
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": model.cache_specs(b, s)}

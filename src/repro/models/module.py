@@ -1,0 +1,88 @@
+"""Minimal param-spec module system (no flax available offline).
+
+Every model is a pure function over a nested dict of arrays.  Shapes,
+logical sharding axes and initializers are declared once as ``P`` specs;
+from the same spec tree we derive:
+
+  * materialized params        (init_params)     — training / smoke tests
+  * ShapeDtypeStruct stand-ins (abstract_params) — the multi-pod dry-run
+    never allocates a single real weight
+  * NamedSharding trees        (sharding/rules.py)
+
+Logical axis names are free-form strings resolved by sharding rules; None
+means "never sharded".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Spec of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | fanin
+    fan_in: Optional[int] = None
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(specs, n: int, axis_name: str = "layers"):
+    """Prepend a scanned-stack dimension to every spec in a tree."""
+    def one(p: P) -> P:
+        return P(shape=(n,) + p.shape, axes=(axis_name,) + p.axes,
+                 init=p.init, fan_in=p.fan_in, scale=p.scale, dtype=p.dtype)
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _init_one(p: P, key) -> jnp.ndarray:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "fanin":
+        fan = p.fan_in or (p.shape[-2] if len(p.shape) >= 2 else p.shape[-1])
+        std = 1.0 / math.sqrt(fan)
+    else:
+        std = p.scale
+    return (jax.random.truncated_normal(key, -2.0, 2.0, p.shape, jnp.float32)
+            * std).astype(p.dtype)
+
+
+def init_params(specs, key):
+    """Materialize a spec tree into arrays (host/devices as placed)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    return int(sum(np.prod(p.shape) for p in leaves))
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    return int(sum(np.prod(p.shape) * jnp.dtype(p.dtype).itemsize
+                   for p in leaves))

@@ -1,0 +1,198 @@
+"""Mixture-of-Experts with explicit expert parallelism via shard_map.
+
+Design (DESIGN.md §5): activations are batch-sharded and *replicated* over
+the "model" axis, experts are sharded over "model".  Each model-rank
+therefore already holds every local token: it filters the (token, choice)
+pairs routed to *its* experts, capacity-buckets them (distributed/dispatch),
+runs its expert FFNs, scatter-adds partial outputs, and a single
+``psum("model")`` combines — one collective per MoE layer, the same volume
+as a tensor-parallel all-reduce.  No all_to_all of token payloads is needed
+because the tokens were never sharded over "model" to begin with.
+
+Expert weights are additionally sharded over "data" (FSDP); the body
+all-gathers them per layer, and the transpose (reduce-scatter of expert
+grads) lands exactly on the ZeRO-sharded optimizer state.
+
+Without a mesh (unit tests / CPU smoke), ``moe_ffn`` runs the same math on
+a single rank — it is the reference implementation of itself.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.distributed.dispatch import gather_from_buckets, plan_routes, \
+    scatter_to_buckets, slot_tables
+from repro.models.ffn import ffn, ffn_spec
+from repro.models.layers import dense, dense_spec
+from repro.models.module import P
+
+
+def moe_spec(cfg):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    spec = {
+        "router": dense_spec(d, e, ("embed", None)),
+        "w_gate": P((e, d, f), ("expert", "embed", "moe_mlp"),
+                    init="fanin", fan_in=d),
+        "w_up": P((e, d, f), ("expert", "embed", "moe_mlp"),
+                  init="fanin", fan_in=d),
+        "w_down": P((e, f, d), ("expert", "moe_mlp", "embed"),
+                    init="fanin", fan_in=f),
+    }
+    if cfg.n_shared_experts:
+        spec["shared"] = ffn_spec(d, cfg.d_ff_expert * cfg.n_shared_experts,
+                                  "swiglu")
+    return spec
+
+
+def _router(params, cfg, x2d):
+    """x2d [T, D] -> (probs [T, k], ids [T, k], aux_fields)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    if cfg.family == "moe" and cfg.top_k:
+        pass
+    probs_all = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs_all, cfg.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance terms (to be averaged over the data axes).
+    me = jnp.mean(probs_all, axis=0)                          # [E]
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0) / (x2d.shape[0] * cfg.top_k)
+    return top_p, top_i, (me, ce)
+
+
+def _expert_ffn(w_gate, w_up, w_down, buf):
+    """buf [E, C, D] -> [E, C, D] through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+
+
+def _moe_local(params, cfg, x2d, e_lo, e_loc: int, capacity: int):
+    """Route local tokens to the ``e_loc`` experts starting at ``e_lo``
+    (``e_lo`` may be a traced axis_index); return the partial output (zero
+    rows for tokens whose experts live elsewhere), aux terms and the
+    dropped-token count."""
+    t, d = x2d.shape
+    top_p, top_i, (me, ce) = _router(params, cfg, x2d)
+    flat_e = top_i.reshape(-1)
+    local = (flat_e >= e_lo) & (flat_e < e_lo + e_loc)
+    bucket = jnp.where(local, flat_e - e_lo, e_loc).astype(jnp.int32)
+    item_of = (jnp.arange(t * cfg.top_k, dtype=jnp.int32) // cfg.top_k)
+    plan = plan_routes(bucket, e_loc, capacity)
+    tabs = slot_tables(plan, e_loc, capacity, item_of=item_of,
+                       weights=top_p.reshape(-1))
+    buf = scatter_to_buckets(plan, x2d, e_loc, capacity,
+                             item_for_slot=tabs[0])
+    buf = buf.reshape(e_loc, capacity, d)
+    h = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf)
+    out = gather_from_buckets(tabs, h.reshape(e_loc * capacity, d), t)
+    return out, me, ce, plan.n_dropped
+
+
+def moe_ffn(params, cfg, x, mesh=None):
+    """x [B, S, D] -> ([B, S, D], aux dict).
+
+    With a mesh, runs under shard_map with experts on the "model" axis and
+    expert weights FSDP-gathered over "data".
+    """
+    b, s, d = x.shape
+    e = cfg.n_experts
+
+    if mesh is None or "model" not in mesh.axis_names:
+        x2d = x.reshape(b * s, d)
+        capacity = max(1, int(math.ceil(
+            b * s * cfg.top_k / e * cfg.capacity_factor)))
+        out, me, ce, dropped = _moe_local(params, cfg, x2d, 0, e, capacity)
+        aux = {"lb_loss": e * jnp.sum(me * ce), "dropped": dropped}
+        y = out.reshape(b, s, d)
+    else:
+        n_model = mesh.shape["model"]
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_extent = math.prod(mesh.shape[a] for a in dp_axes)
+        if b % max(dp_extent, 1) != 0:
+            dp_axes = ()            # tiny batches (long_500k) replicate
+        b_loc = b // math.prod([mesh.shape[a] for a in dp_axes] or [1])
+        if e % n_model == 0:
+            tp, e_loc = 1, e // n_model
+            wg_v, wu_v, wd_v = (params["w_gate"], params["w_up"],
+                                params["w_down"])
+        elif n_model % e == 0:
+            # Virtual experts: split each expert's FFN hidden dim into
+            # tp slices so E*tp == n_model.  SwiGLU factorizes exactly over
+            # the hidden dim, and the down-projection halves are partial
+            # sums combined by the existing psum("model").
+            tp, e_loc = n_model // e, 1
+            f = cfg.d_ff_expert
+            assert f % tp == 0, (f, tp)
+            wg_v = params["w_gate"].reshape(e, d, tp, f // tp) \
+                .transpose(0, 2, 1, 3).reshape(e * tp, d, f // tp)
+            wu_v = params["w_up"].reshape(e, d, tp, f // tp) \
+                .transpose(0, 2, 1, 3).reshape(e * tp, d, f // tp)
+            wd_v = params["w_down"].reshape(e, tp, f // tp, d) \
+                .reshape(e * tp, f // tp, d)
+        else:
+            raise ValueError(f"n_experts={e} vs model axis {n_model}: "
+                             "need one to divide the other")
+        capacity = max(1, int(math.ceil(
+            b_loc * s * cfg.top_k / e * cfg.capacity_factor)))
+
+        def body(x_loc, router_w, wg, wu, wd):
+            # FSDP-gather expert weights over "data" in bf16 (cast before
+            # the gather halves the dominant weight-gather collective; the
+            # transpose reduce-scatters bf16 grads into f32 accumulation at
+            # the cast boundary).
+            wg = jax.lax.all_gather(wg.astype(jnp.bfloat16), "data",
+                                    axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu.astype(jnp.bfloat16), "data",
+                                    axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd.astype(jnp.bfloat16), "data",
+                                    axis=2, tiled=True)
+            bl = x_loc.shape[0]
+            x2d = x_loc.reshape(bl * s, d)
+            rank = jax.lax.axis_index("model")
+            # With virtual experts the rank owns one slice of real expert
+            # rank // tp; routing filters on the *real* expert id.
+            e_lo = (rank // tp) * e_loc
+            lp = {"router": {"w": router_w}, "w_gate": wg, "w_up": wu,
+                  "w_down": wd}
+            out, me, ce, dropped = _moe_local(lp, cfg, x2d, e_lo, e_loc,
+                                              capacity)
+            if tp > 1:
+                dropped = dropped // tp  # each drop counted tp times
+            # Combine in bf16: halves the per-layer [T_loc, D] all-reduce.
+            out = jax.lax.psum(out.astype(jnp.bfloat16), "model")
+            # me/ce are computed from model-replicated inputs (invariant over
+            # "model" in VMA terms); average over the data axes only.
+            if dp_axes:
+                me = jax.lax.pmean(me, dp_axes)
+                ce = jax.lax.pmean(ce, dp_axes)
+            dropped = jax.lax.psum(dropped, "model")
+            if dp_axes:
+                dropped = jax.lax.psum(dropped, dp_axes)
+            return out.reshape(bl, s, d), me, ce, dropped
+
+        bspec = dp_axes if dp_axes else None
+        y, me, ce, dropped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(PS(bspec, None, None),
+                      PS(None, None),
+                      PS("model", "data", None),
+                      PS("model", "data", None),
+                      PS("model", None, "data")),
+            out_specs=(PS(bspec, None, None), PS(), PS(), PS()),
+            # With a replicated batch (long_500k), the FSDP all_gather over
+            # "data" defeats VMA's replication inference; the outputs are
+            # data-invariant by construction.
+            check_vma=bool(dp_axes),
+        )(x, params["router"]["w"], wg_v, wu_v, wd_v)
+        aux = {"lb_loss": e * jnp.sum(me * ce), "dropped": dropped}
+
+    if cfg.n_shared_experts:
+        y = y + ffn(params["shared"], x, "swiglu")
+    return y, aux

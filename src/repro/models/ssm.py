@@ -1,0 +1,162 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, recurrent
+state update for decode (constant-memory long context; this is why zamba2
+runs the 500k cell).
+
+Per head h the SSD recurrence with scalar decay a_t = exp(-exp(A_log_h) *
+softplus(dt_t + dt_bias_h)) is
+
+    S_t = a_t * S_{t-1} + B_t (dt_t x_t)^T          S in R^{N x P}
+    y_t = C_t . S_t + D_h x_t
+
+Chunked form (chunk length Lc, scanned): intra-chunk is a decay-masked
+quadratic ("attention-like") product, inter-chunk is a rank-N state carried
+across chunks.  All decay factors are exp of non-positive numbers -> no
+stabilizer needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BATCH, dense, dense_spec, rmsnorm, \
+    rmsnorm_spec, shard_act
+from repro.models.module import P
+
+
+def mamba2_spec(cfg, d_in=None):
+    d = d_in or cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    conv_dim = di + 2 * n           # x, B, C go through the causal conv
+    return {
+        "in_proj": dense_spec(d, 2 * di + 2 * n + h, ("embed", "mlp")),
+        "conv_w": P((conv_dim, cfg.ssm_conv), (None, None), init="fanin",
+                    fan_in=cfg.ssm_conv),
+        "conv_b": P((conv_dim,), (None,), init="zeros"),
+        "a_log": P((h,), (None,), init="zeros"),
+        "d_skip": P((h,), (None,), init="ones"),
+        "dt_bias": P((h,), (None,), init="zeros"),
+        "norm": rmsnorm_spec(di),
+        "out_proj": dense_spec(di, d, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x [B, S, C]; w [C, K]; state [B, K-1, C] or
+    None (zeros).  Returns (y [B, S, C], new_state)."""
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, j:j + x.shape[1], :] * w[None, None, :, j].astype(x.dtype)
+            for j in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return y + b.astype(x.dtype), new_state
+
+
+def _split_in_proj(params, cfg, x, d_in):
+    di = cfg.ssm_expand * d_in
+    n = cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    zxbcdt = dense(params["in_proj"], x)
+    z, xs, bb, cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xs, bb, cc, dt, di, n, h
+
+
+def mamba2(params, cfg, x, chunk: int = 128, d_in=None):
+    """Train/prefill. x [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    z, xs, bb, cc, dt, di, n, h = _split_in_proj(params, cfg, x, d_in or d)
+    p = cfg.ssm_head_dim
+
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, bb, cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    log_a = (-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)   # <= 0
+    xh = xs.reshape(b, s, h, p)
+    xt = xh * dt[..., None].astype(xh.dtype)                       # dt * x
+
+    lc = min(chunk, s)
+    nc = s // lc
+    assert nc * lc == s, (s, lc)
+
+    xtc = jnp.moveaxis(xt.reshape(b, nc, lc, h, p), 1, 0)
+    xc = jnp.moveaxis(xh.reshape(b, nc, lc, h, p), 1, 0)
+    bc = jnp.moveaxis(bb.reshape(b, nc, lc, n), 1, 0)
+    ccc = jnp.moveaxis(cc.reshape(b, nc, lc, n), 1, 0)
+    lac = jnp.moveaxis(log_a.reshape(b, nc, lc, h), 1, 0)
+    # Batch + head sharding through chunk reshapes (heads carry TP).
+    xtc = shard_act(xtc, None, BATCH, None, "model", None)
+    xc = shard_act(xc, None, BATCH, None, "model", None)
+    bc = shard_act(bc, None, BATCH, None, None)
+    ccc = shard_act(ccc, None, BATCH, None, None)
+    lac = shard_act(lac, None, BATCH, None, "model")
+
+    def body(S, xs_):
+        xtc, xc, bc, cc, lac = xs_
+        csum = jnp.cumsum(lac, axis=1)                             # [B,Lc,H]
+        cb = jnp.einsum("btn,bsn->bts", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+        dec = jnp.exp(csum[:, :, None, :] - csum[:, None, :, :])   # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((lc, lc), jnp.float32))
+        scores = cb[..., None] * dec * tri[None, :, :, None]
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores,
+                             xtc.astype(jnp.float32))
+        y_inter = jnp.einsum("btn,bhnp->bthp", cc.astype(jnp.float32), S) \
+            * jnp.exp(csum)[..., None]
+        to_end = jnp.exp(csum[:, -1:, :] - csum)                   # [B,Lc,H]
+        s_c = jnp.einsum("bsn,bshp,bsh->bhnp", bc.astype(jnp.float32),
+                         xtc.astype(jnp.float32), to_end)
+        S = jnp.exp(csum[:, -1])[:, :, None, None] * S + s_c
+        return S, y_intra + y_inter
+
+    s0 = shard_act(jnp.zeros((b, h, n, p), jnp.float32),
+                   BATCH, "model", None, None)
+    _, ys = jax.lax.scan(body, s0, (xtc, xc, bc, ccc, lac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["out_proj"], y)
+
+
+def mamba2_init_state(cfg, batch, d_in, dtype=jnp.float32):
+    di = cfg.ssm_expand * d_in
+    n = cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    return {
+        "S": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba2_step(params, cfg, x, state, d_in=None):
+    """Decode one token. x [B, 1, D]; state {"S", "conv"}."""
+    b, _, d = x.shape
+    z, xs, bb, cc, dt, di, n, h = _split_in_proj(params, cfg, x, d_in or d)
+    p = cfg.ssm_head_dim
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"],
+                                        state["conv"].astype(conv_in.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xs, bb, cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)  # [B,H]
+    xh = xs.reshape(b, h, p).astype(jnp.float32)
+    xt = xh * dt[..., None]
+    S = a[:, :, None, None] * state["S"] + jnp.einsum(
+        "bn,bhp->bhnp", bb[:, 0].astype(jnp.float32), xt)
+    y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), S)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense(params["out_proj"], y), {"S": S, "conv": conv_state}

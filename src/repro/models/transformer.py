@@ -1,0 +1,261 @@
+"""Scanned transformer stacks for all six architecture families.
+
+Every stack is built from *homogeneous scanned groups* so HLO size (and
+compile time) is independent of depth:
+
+  dense       L x [attn + ffn]
+  moe         first_dense x [attn + ffn]  +  scan (L-fd) x [attn + MoE]
+  vlm         scan G x [(k-1) self blocks + 1 gated cross-attn block]
+  encdec      scan Le x [enc block]  +  scan Ld x [dec self + cross + ffn]
+  ssm_hybrid  scan G x [k Mamba2 blocks + shared-attn invocation (LoRA)]
+  xlstm       scan G x [(k-1) mLSTM + 1 sLSTM]  (or uniform mLSTM)
+
+Decode steps mirror the same group structure with stacked caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import ssm, xlstm
+from repro.models.attention import blockwise_attn, decode_attn, \
+    gqa_decode_self_attn, gqa_project_qkv, gqa_self_attn, gqa_spec, \
+    mla_decode_self_attn, mla_self_attn, mla_spec
+from repro.models.ffn import ffn, ffn_spec
+from repro.models.layers import ACT_DTYPE, BATCH, dense, dense_spec, \
+    embed, embed_spec, rmsnorm, rmsnorm_spec, rope_tables, shard_act, \
+    unembed, unembed_spec
+from repro.models.module import P, stack
+from repro.models.moe import moe_ffn, moe_spec
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+def _remat(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+# ============================================================== dense block
+def dense_block_spec(cfg):
+    return {
+        "attn_norm": rmsnorm_spec(cfg.d_model),
+        "attn": gqa_spec(cfg),
+        "ffn_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": ffn_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def dense_block(p, cfg, run, x, positions):
+    # Sequence-parallel residual: the saved-for-backward layer inputs are
+    # sharded over ("model", seq) instead of replicated (Megatron SP) —
+    # GSPMD places the gathers (measured better than explicit per-sublayer
+    # AG/RS placement: see EXPERIMENTS.md §Perf iteration 1.2, refuted).
+    # bf16 cast guards against f32 creep in the scan carry.  Norm outputs
+    # are pinned seq-sharded so the SP->TP transition happens on the small
+    # bf16 q/kv projections (all-to-all / kv-gather), never on the f32
+    # norm internals (measured 159 GB/step of f32 residual gathers on yi).
+    x = shard_act(x.astype(ACT_DTYPE), BATCH, "model", None)
+    h = shard_act(rmsnorm(p["attn_norm"], x, cfg.norm_eps),
+                  BATCH, "model", None)
+    x = x + gqa_self_attn(p["attn"], cfg, h, positions=positions,
+                          chunk_q=run.attn_chunk_q,
+                          chunk_kv=run.attn_chunk_kv)
+    h = shard_act(rmsnorm(p["ffn_norm"], x, cfg.norm_eps),
+                  BATCH, "model", None)
+    x = x + ffn(p["ffn"], h, cfg.act)
+    return x
+
+
+def dense_block_bidir(p, cfg, run, x, positions):
+    """Encoder block: bidirectional self-attention (seamless-m4t encoder)."""
+    x = shard_act(x.astype(ACT_DTYPE), BATCH, "model", None)
+    x = x + gqa_self_attn(p["attn"], cfg, rmsnorm(p["attn_norm"], x,
+                                                  cfg.norm_eps),
+                          positions=positions, chunk_q=run.attn_chunk_q,
+                          chunk_kv=run.attn_chunk_kv, causal=False)
+    x = x + ffn(p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+def dense_block_decode(p, cfg, x, kc, vc, pos):
+    a, kc, vc = gqa_decode_self_attn(
+        p["attn"], cfg, rmsnorm(p["attn_norm"], x, cfg.norm_eps), kc, vc,
+        pos)
+    x = x + a
+    x = x + ffn(p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg.act)
+    return x, kc, vc
+
+
+# ================================================================ moe block
+def moe_block_spec(cfg):
+    attn = mla_spec(cfg) if cfg.mla else gqa_spec(cfg)
+    return {
+        "attn_norm": rmsnorm_spec(cfg.d_model),
+        "attn": attn,
+        "ffn_norm": rmsnorm_spec(cfg.d_model),
+        "moe": moe_spec(cfg),
+    }
+
+
+def moe_block(p, cfg, run, x, positions, mesh):
+    x = shard_act(x.astype(ACT_DTYPE), BATCH, "model", None)
+    h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = mla_self_attn(p["attn"], cfg, h, positions=positions,
+                          chunk_q=run.attn_chunk_q,
+                          chunk_kv=run.attn_chunk_kv)
+    else:
+        a = gqa_self_attn(p["attn"], cfg, h, positions=positions,
+                          chunk_q=run.attn_chunk_q,
+                          chunk_kv=run.attn_chunk_kv)
+    x = x + a
+    y, aux = moe_ffn(p["moe"], cfg, rmsnorm(p["ffn_norm"], x, cfg.norm_eps),
+                     mesh=mesh)
+    return x + y, aux
+
+
+def moe_block_decode(p, cfg, x, cache_slices, pos, mesh):
+    h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, ckv, kr = mla_decode_self_attn(p["attn"], cfg, h,
+                                          cache_slices["ckv"],
+                                          cache_slices["kr"], pos)
+        new_cache = {"ckv": ckv, "kr": kr}
+    else:
+        a, kc, vc = gqa_decode_self_attn(p["attn"], cfg, h,
+                                         cache_slices["k"],
+                                         cache_slices["v"], pos)
+        new_cache = {"k": kc, "v": vc}
+    x = x + a
+    y, _ = moe_ffn(p["moe"], cfg, rmsnorm(p["ffn_norm"], x, cfg.norm_eps),
+                   mesh=mesh)
+    return x + y, new_cache
+
+
+# ============================================================== cross block
+def cross_block_spec(cfg):
+    return {
+        "norm": rmsnorm_spec(cfg.d_model),
+        "attn": gqa_spec(cfg, kv_d_in=cfg.d_vision),
+        "gate": P((1,), (None,), init="zeros"),
+        "ffn_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": ffn_spec(cfg.d_model, cfg.d_ff, cfg.act),
+        "ffn_gate": P((1,), (None,), init="zeros"),
+    }
+
+
+def cross_block(p, cfg, run, x, img_kv):
+    """Gated cross-attention (llama-3.2-vision style)."""
+    x = shard_act(x.astype(ACT_DTYPE), BATCH, "model", None)
+    k, v = img_kv
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["attn"]["wq"], h).reshape(b, s, cfg.n_heads, hd)
+    o = blockwise_attn(q, k, v, causal=False, chunk_q=run.attn_chunk_q,
+                       chunk_kv=run.attn_chunk_kv)
+    o = dense(p["attn"]["wo"], o.reshape(b, s, -1))
+    x = x + jnp.tanh(p["gate"]).astype(x.dtype) * o
+    x = x + jnp.tanh(p["ffn_gate"]).astype(x.dtype) * ffn(
+        p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+def cross_img_kv(p, cfg, img):
+    """Precompute cross-attention K/V from vision embeddings [B,T,dv]."""
+    b, t, _ = img.shape
+    hd = cfg.hd
+    k = dense(p["attn"]["wk"], img).reshape(b, t, cfg.n_kv_heads, hd)
+    v = dense(p["attn"]["wv"], img).reshape(b, t, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def cross_block_decode(p, cfg, x, img_k, img_v):
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    b = x.shape[0]
+    q = dense(p["attn"]["wq"], h).reshape(b, 1, cfg.n_heads, cfg.hd)
+    o = decode_attn(q, img_k, img_v, img_k.shape[1])
+    o = dense(p["attn"]["wo"], o.reshape(b, 1, -1))
+    x = x + jnp.tanh(p["gate"]).astype(x.dtype) * o
+    x = x + jnp.tanh(p["ffn_gate"]).astype(x.dtype) * ffn(
+        p["ffn"], rmsnorm(p["ffn_norm"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+# ======================================================== ssm hybrid blocks
+def shared_attn_spec(cfg):
+    """zamba2 shared attention+ffn block (params shared across invocations;
+    per-invocation LoRA adapters are scanned separately)."""
+    return {
+        "norm": rmsnorm_spec(cfg.d_model),
+        "attn": gqa_spec(cfg),
+        "ffn_norm": rmsnorm_spec(cfg.d_model),
+        "ffn": ffn_spec(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def shared_lora_spec(cfg):
+    r = cfg.shared_lora_rank
+    d = cfg.d_model
+    return {
+        "a_q": P((d, r), ("embed", None), init="fanin", fan_in=d),
+        "b_q": P((r, cfg.n_heads * cfg.hd), (None, "heads"), init="zeros"),
+    }
+
+
+def _shared_attn(shared, lora, cfg, run, x, positions):
+    x = shard_act(x.astype(ACT_DTYPE), BATCH, "model", None)
+    h = rmsnorm(shared["norm"], x, cfg.norm_eps)
+    q_lora = jnp.einsum("...d,dr->...r", h, lora["a_q"].astype(h.dtype))
+    q_extra = jnp.einsum("...r,rh->...h", q_lora,
+                         lora["b_q"].astype(h.dtype))
+    b, s, _ = x.shape
+    hd = cfg.hd
+    sin, cos = rope_tables(positions, hd, cfg.rope_theta)
+    q, k, v = gqa_project_qkv(shared["attn"], cfg, h, rope=None)
+    q = q + q_extra.reshape(b, s, cfg.n_heads, hd)
+    from repro.models.attention import apply_rope
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    o = blockwise_attn(q, k, v, causal=True, chunk_q=run.attn_chunk_q,
+                       chunk_kv=run.attn_chunk_kv)
+    x = x + dense(shared["attn"]["wo"], o.reshape(b, s, -1))
+    x = x + ffn(shared["ffn"], rmsnorm(shared["ffn_norm"], x, cfg.norm_eps),
+                cfg.act)
+    return x
+
+
+def _shared_attn_decode(shared, lora, cfg, x, kc, vc, pos):
+    h = rmsnorm(shared["norm"], x, cfg.norm_eps)
+    q_extra = jnp.einsum("...r,rh->...h",
+                         jnp.einsum("...d,dr->...r", h,
+                                    lora["a_q"].astype(h.dtype)),
+                         lora["b_q"].astype(h.dtype))
+    b = x.shape[0]
+    hd = cfg.hd
+    from repro.models.attention import apply_rope
+    sin, cos = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = dense(shared["attn"]["wq"], h).reshape(b, 1, cfg.n_heads, hd)
+    q = q + q_extra.reshape(b, 1, cfg.n_heads, hd)
+    k = dense(shared["attn"]["wk"], h).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = dense(shared["attn"]["wv"], h).reshape(b, 1, cfg.n_kv_heads, hd)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    t = kc.shape[1]
+    slot = jnp.minimum(pos, t - 1)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+    o = decode_attn(q, kc, vc, pos + 1)
+    x = x + dense(shared["attn"]["wo"], o.reshape(b, 1, -1))
+    x = x + ffn(shared["ffn"], rmsnorm(shared["ffn_norm"], x, cfg.norm_eps),
+                cfg.act)
+    return x, kc, vc

@@ -1,0 +1,242 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunked-parallel) and sLSTM
+(scalar-memory, inherently sequential -> lax.scan; the xLSTM paper itself
+notes sLSTM is not parallelizable).
+
+mLSTM per head: exponential input gate i_t, forget gate f_t (sigmoid in log
+space), matrix memory C in R^{dk x dv}, normalizer n in R^{dk}, running
+stabilizer m:
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (stabilized by m_t)
+    h_t = (q_t C_t) / max(|q_t n_t|, exp(-m_t))
+
+Train/prefill uses the chunkwise form (intra-chunk decay-masked quadratic +
+carried (C, n, m)), decode the recurrent step — constant-size state, which
+is why xlstm runs the 500k-context cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import BATCH, dense, dense_spec, rmsnorm, \
+    rmsnorm_spec, shard_act
+from repro.models.module import P
+
+
+def mlstm_spec(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "wq": dense_spec(d, d, ("embed", "heads")),
+        "wk": dense_spec(d, d, ("embed", "heads")),
+        "wv": dense_spec(d, d, ("embed", "heads")),
+        "wi": dense_spec(d, h, ("embed", None), bias=True),
+        "wf": dense_spec(d, h, ("embed", None), bias=True),
+        "wo_gate": dense_spec(d, d, ("embed", "heads")),
+        "norm": rmsnorm_spec(d),
+        "wo": dense_spec(d, d, ("heads", "embed")),
+    }
+
+
+def _mlstm_qkvif(params, cfg, x):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dk = d // h
+    q = dense(params["wq"], x).reshape(b, s, h, dk)
+    k = dense(params["wk"], x).reshape(b, s, h, dk) / math.sqrt(dk)
+    v = dense(params["wv"], x).reshape(b, s, h, dk)
+    log_i = dense(params["wi"], x).astype(jnp.float32)            # [B,S,H]
+    log_f = jax.nn.log_sigmoid(dense(params["wf"], x).astype(jnp.float32))
+    return q, k, v, log_i, log_f, dk
+
+
+def mlstm(params, cfg, x, chunk: int = 128):
+    """Train/prefill mLSTM. x [B,S,D] -> [B,S,D]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q, k, v, log_i, log_f, dk = _mlstm_qkvif(params, cfg, x)
+
+    lc = min(chunk, s)
+    nc = s // lc
+    assert nc * lc == s, (s, lc)
+
+    def tochunks(a):
+        a = jnp.moveaxis(a.reshape((b, nc, lc) + a.shape[2:]), 1, 0)
+        return shard_act(a, *((None, BATCH) + (None,) * (a.ndim - 2)))
+
+    qc, kc, vc = tochunks(q), tochunks(k), tochunks(v)
+    lic, lfc = tochunks(log_i), tochunks(log_f)
+
+    def body(carry, xs_):
+        C, n, m = carry          # [B,H,dk,dv], [B,H,dk], [B,H]
+        qq, kk, vv, li, lf = xs_
+        csum = jnp.cumsum(lf, axis=1)                             # [B,Lc,H]
+        # Stabilizers per query position.
+        m_inter = csum + m[:, None, :]                            # [B,Lc,H]
+        dtil = (csum[:, :, None, :] - csum[:, None, :, :]
+                + li[:, None, :, :])                              # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((lc, lc), bool))
+        dtil = jnp.where(tri[None, :, :, None], dtil, -jnp.inf)
+        m_intra = jnp.max(dtil, axis=2)                           # [B,Lc,H]
+        m_new = jnp.maximum(m_inter, m_intra)
+        dmat = jnp.exp(dtil - m_new[:, :, None, :])               # [B,t,s,H]
+        qk = jnp.einsum("bthd,bshd->btsh", qq.astype(jnp.float32),
+                        kk.astype(jnp.float32))
+        w = qk * dmat
+        scale_i = jnp.exp(m_inter - m_new)                        # [B,Lc,H]
+        h_num = jnp.einsum("btsh,bshv->bthv", w, vv.astype(jnp.float32)) \
+            + scale_i[..., None] * jnp.einsum(
+                "bthd,bhdv->bthv", qq.astype(jnp.float32), C)
+        # Normalizer: q_t . n_t = sum_s dmat_ts (q_t . k_s) + inter term
+        #           = sum_s w_ts + scale_i * (q_t . n_prev).
+        qn = jnp.einsum("bthd,bhd->bth", qq.astype(jnp.float32), n)
+        qn_total = jnp.sum(w, axis=2) + scale_i * qn
+        denom = jnp.maximum(jnp.abs(qn_total), jnp.exp(-m_new))
+        hh = h_num / denom[..., None]
+        # Carry update.
+        total = csum[:, -1]                                       # [B,H]
+        m_c = jnp.maximum(m + total,
+                          jnp.max(total[:, None, :] - csum + li, axis=1))
+        sc_old = jnp.exp(m + total - m_c)
+        sc_new = jnp.exp(total[:, None, :] - csum + li
+                         - m_c[:, None, :])                       # [B,Lc,H]
+        C = sc_old[:, :, None, None] * C + jnp.einsum(
+            "bshd,bshv,bsh->bhdv", kk.astype(jnp.float32),
+            vv.astype(jnp.float32), sc_new)
+        n = sc_old[:, :, None] * n + jnp.einsum(
+            "bshd,bsh->bhd", kk.astype(jnp.float32), sc_new)
+        return (C, n, m_c), hh
+
+    dk_ = d // h
+    c0 = shard_act(jnp.zeros((b, h, dk_, dk_), jnp.float32),
+                   BATCH, None, None, None)
+    n0 = shard_act(jnp.zeros((b, h, dk_), jnp.float32), BATCH, None, None)
+    m0 = shard_act(jnp.full((b, h), -jnp.inf, jnp.float32), BATCH, None)
+    _, hs = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(dense(params["wo_gate"], x))
+    y = rmsnorm(params["norm"], y * o, cfg.norm_eps)
+    return dense(params["wo"], y)
+
+
+def mlstm_init_state(cfg, batch):
+    h = cfg.n_heads
+    dk = cfg.d_model // h
+    return {"C": jnp.zeros((batch, h, dk, dk), jnp.float32),
+            "n": jnp.zeros((batch, h, dk), jnp.float32),
+            "m": jnp.full((batch, h), -jnp.inf, jnp.float32)}
+
+
+def mlstm_step(params, cfg, x, state):
+    """Decode one token. x [B,1,D]."""
+    b, _, d = x.shape
+    q, k, v, log_i, log_f, dk = _mlstm_qkvif(params, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]          # [B,H,dk]
+    li, lf = log_i[:, 0], log_f[:, 0]            # [B,H]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fs = jnp.exp(lf + m - m_new)
+    is_ = jnp.exp(li - m_new)
+    C = fs[:, :, None, None] * C + is_[:, :, None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = fs[:, :, None] * n + is_[:, :, None] * k.astype(jnp.float32)
+    h_num = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), C)
+    qn = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    y = (h_num / denom[..., None]).reshape(b, 1, d).astype(x.dtype)
+    o = jax.nn.sigmoid(dense(params["wo_gate"], x))
+    y = rmsnorm(params["norm"], y * o, cfg.norm_eps)
+    return dense(params["wo"], y), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------- sLSTM
+def slstm_spec(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w{g}"] = dense_spec(d, d, ("embed", "heads"), bias=True)
+        gates[f"r{g}"] = P((h, dh, dh), (None, None, None), init="fanin",
+                           fan_in=dh)
+    gates["norm"] = rmsnorm_spec(d)
+    gates["wo"] = dense_spec(d, d, ("heads", "embed"))
+    return gates
+
+
+def slstm(params, cfg, x):
+    """x [B,S,D] -> [B,S,D] via sequential scan (sLSTM is not
+    parallelizable over time — xLSTM paper §2)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    pre = {g: dense(params[f"w{g}"], x).reshape(b, s, h, dh).astype(
+        jnp.float32) for g in ("z", "i", "f", "o")}
+    rec = {g: params[f"r{g}"].astype(jnp.float32) for g in
+           ("z", "i", "f", "o")}
+
+    def step(carry, xs_):
+        c, n, hprev, m = carry
+        pz, pi, pf, po = xs_
+
+        def r(g, p):
+            return p + jnp.einsum("bhd,hde->bhe", hprev, rec[g])
+        z = jnp.tanh(r("z", pz))
+        li = r("i", pi)
+        lf = jax.nn.log_sigmoid(r("f", pf))
+        o = jax.nn.sigmoid(r("o", po))
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        hnew = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, hnew, m_new), hnew
+
+    z0 = shard_act(jnp.zeros((b, h, dh), jnp.float32), BATCH, None, None)
+    m0 = shard_act(jnp.full((b, h, dh), -jnp.inf, jnp.float32),
+                   BATCH, None, None)
+    xs_ = tuple(shard_act(jnp.moveaxis(pre[g], 1, 0),
+                          None, BATCH, None, None)
+                for g in ("z", "i", "f", "o"))
+    _, hs = jax.lax.scan(step, (z0, z0, z0, m0), xs_)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return dense(params["wo"], y)
+
+
+def slstm_init_state(cfg, batch):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, h, dh), -jnp.inf, jnp.float32)}
+
+
+def slstm_step(params, cfg, x, state):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    pre = {g: dense(params[f"w{g}"], x).reshape(b, h, dh).astype(jnp.float32)
+           for g in ("z", "i", "f", "o")}
+    rec = {g: params[f"r{g}"].astype(jnp.float32) for g in
+           ("z", "i", "f", "o")}
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+
+    def r(g):
+        return pre[g] + jnp.einsum("bhd,hde->bhe", hprev, rec[g])
+    z = jnp.tanh(r("z"))
+    li = r("i")
+    lf = jax.nn.log_sigmoid(r("f"))
+    o = jax.nn.sigmoid(r("o"))
+    m_new = jnp.maximum(lf + m, li)
+    i_ = jnp.exp(li - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c = f_ * c + i_ * z
+    n = f_ * n + i_
+    hnew = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    y = hnew.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return dense(params["wo"], y), {"c": c, "n": n, "h": hnew, "m": m_new}

@@ -1,0 +1,81 @@
+"""AdamW with global-norm clipping (hand-rolled; optax unavailable offline).
+
+Optimizer state is a pytree congruent with params (fp32 m/v), so it inherits
+the params' (FSDP + TP) shardings — ZeRO-style optimizer sharding for free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(grads, state: OptState, params, run: RunConfig, lr):
+    """One AdamW step; returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if run.grad_clip > 0 else 1.0
+    step = state.step + 1
+    b1, b2 = run.beta1, run.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        newp = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + 1e-8) + run.weight_decay * p.astype(
+                jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    # Params/opt trees are nested dicts of arrays, so tuple leaves are
+    # unambiguous here.
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_tup)
+    return new_p, OptState(step=step, m=new_m, v=new_v), gnorm
+
+
+def schedule(run: RunConfig, step):
+    """Learning-rate schedules: cosine, WSD (MiniCPM), const."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(run.warmup_steps, 1), 1.0)
+    if run.schedule == "const":
+        return run.learning_rate * warm
+    total = float(max(run.total_steps, 1))
+    if run.schedule == "wsd":
+        # Warmup -> Stable (80%) -> exponential Decay (last 20 %).
+        decay_start = 0.8 * total
+        in_decay = jnp.maximum(step - decay_start, 0.0) / (total * 0.2)
+        decay = jnp.exp(-5.0 * in_decay)        # ~exp decay to ~0.7% of peak
+        return run.learning_rate * warm * jnp.where(step < decay_start, 1.0,
+                                                    decay)
+    # cosine
+    frac = jnp.clip(step / total, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return run.learning_rate * warm * (0.1 + 0.9 * cos)

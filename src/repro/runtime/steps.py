@@ -1,0 +1,172 @@
+"""train_step / serve_step builders.
+
+``make_train_step`` returns a pure function (params, opt, batch) ->
+(params, opt, metrics) with optional gradient accumulation (scan over
+microbatches), z-loss, MoE load-balance loss, and vocab-sharded logits.
+``make_serve_step`` returns (params, tokens, cache) -> (next_tokens, cache).
+Both are what launch/dryrun.py lowers for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.sharding.rules import param_shardings
+
+
+def _shard(x, mesh, *parts):
+    """Sharding constraint; part entries not present in the mesh are
+    dropped (e.g. "pod" on the single-pod mesh), never silently ignored as
+    a whole."""
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def keep(p):
+        if p is None:
+            return None
+        if isinstance(p, (tuple, list)):
+            kept = tuple(a for a in p if a in names)
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return p if p in names else None
+
+    spec = PartitionSpec(*(keep(p) for p in parts))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def cross_entropy(logits, labels, z_loss_coef: float, mesh=None):
+    """Token-mean CE over vocab-sharded f32 logits.
+
+    The gold logit is extracted with a masked reduction (iota == label)
+    rather than take_along_axis: the comparison fuses into the reduce and
+    partitions cleanly over the sharded vocab axis, whereas a gather on a
+    sharded axis makes GSPMD replicate the [B, S, V] logits.
+    """
+    logits = _shard(logits, mesh, ("pod", "data"), None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot = (vocab_iota == labels[..., None]).astype(logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(lse - gold)
+    zl = z_loss_coef * jnp.mean(jnp.square(lse)) if z_loss_coef else 0.0
+    return ce + zl, ce
+
+
+def make_loss_fn(model: Model, run: RunConfig, mesh=None):
+    cfg = model.cfg
+    p_sh = param_shardings(model.specs, mesh) if mesh is not None else None
+
+    def cast_params(params):
+        """Compute-cast matrices to bf16 *while still FSDP-sharded* (pinned
+        by the sharding constraint) so GSPMD's per-layer weight all-gathers
+        move bf16, not f32 — halving the FSDP gather volume.  The cast's
+        transpose converts bf16 grads back to f32 at the shard boundary.
+        1-D params (norm scales, biases) stay f32."""
+        if p_sh is None:
+            return params
+
+        def one(p, sh):
+            if p.dtype == jnp.float32 and p.ndim >= 2:
+                return jax.lax.with_sharding_constraint(
+                    p.astype(jnp.bfloat16), sh)
+            return p
+        return jax.tree.map(one, params, p_sh)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(cast_params(params), run, batch,
+                                    mesh=mesh)
+        loss, ce = cross_entropy(logits, batch["labels"], run.z_loss, mesh)
+        metrics = {"ce": ce}
+        if "lb_loss" in aux:
+            loss = loss + cfg.router_aux_coef * aux["lb_loss"]
+            metrics["lb_loss"] = aux["lb_loss"]
+            metrics["dropped"] = aux["dropped"].astype(jnp.float32)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, run: RunConfig, mesh=None):
+    loss_fn = make_loss_fn(model, run, mesh)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    p_sh = param_shardings(model.specs, mesh) if mesh is not None else None
+
+    def constrain_grads(grads):
+        """Pin gradient shardings to the (FSDP+TP) param shardings — without
+        this, scan-accumulated grads of FSDP-gathered weights stay unsharded
+        over "data" and blow per-device memory."""
+        if p_sh is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, p_sh)
+
+    def train_step(params, opt: adamw.OptState, batch):
+        if run.microbatch and run.microbatch > 1:
+            nmb = run.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((nmb, b // nmb) + x.shape[1:])
+            mb_batch = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gacc, macc = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                grads = constrain_grads(grads)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / nmb,
+                    gacc, grads)
+                macc = jax.tree.map(lambda a, m: a + m / nmb, macc, metrics)
+                return (gacc, macc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"ce": 0.0, "loss": 0.0}
+            if model.cfg.n_experts:
+                m0.update(lb_loss=0.0, dropped=0.0)
+            m0 = jax.tree.map(jnp.float32, m0)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), mb_batch)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+        grads = constrain_grads(grads)
+
+        lr = adamw.schedule(run, opt.step)
+        params, opt, gnorm = adamw.update(grads, opt, params, run, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, run: RunConfig, mesh=None):
+    """Forward-only step over a full sequence (the inference-prefill cell)."""
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, run, batch, mesh=mesh)
+        # Next-token logits for the last position only.
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, run: RunConfig, mesh=None):
+    """One greedy decode step against a KV/state cache."""
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, run, tokens, cache,
+                                          mesh=mesh)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step

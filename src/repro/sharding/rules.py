@@ -1,0 +1,122 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Parameters declare logical axes in their ParamSpec; these rules resolve them
+against whatever mesh is in use.  A rule is silently dropped (replicated)
+when the dimension is not divisible by the assigned mesh extent — e.g. GQA
+kv-head counts smaller than the model axis.
+
+Weight strategy (DESIGN.md §5):
+  tensor-parallel axes (vocab, heads, mlp, experts, q_lora) -> "model"
+  FSDP axis (embed / the non-TP matmul dim)                 -> "data"
+Activations are sharded only on batch (("pod","data")) via constraints.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.module import P
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "q_lora": ("model",),
+    "embed": ("data",),          # FSDP / ZeRO-3 weight sharding
+    "moe_mlp": (),
+    "kv_lora": (),
+    "layers": (),
+    "groups": (),
+}
+
+BATCH_AXES = ("pod", "data")
+
+
+def mesh_extent(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def spec_pspec(p: P, mesh: Mesh, rules=None) -> PartitionSpec:
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    parts = []
+    for dim, ax in zip(p.shape, p.axes):
+        assign = tuple(rules.get(ax, ())) if ax else ()
+        assign = tuple(a for a in assign
+                       if a in mesh.axis_names and a not in used)
+        if assign and mesh_extent(mesh, assign) > 1 \
+                and dim % mesh_extent(mesh, assign) == 0:
+            parts.append(assign if len(assign) > 1 else assign[0])
+            used.update(assign)
+        else:
+            parts.append(None)
+    return PartitionSpec(*parts)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, spec_pspec(p, mesh, rules)), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, batch: int, ndim: int) -> PartitionSpec:
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    if not axes or batch % mesh_extent(mesh, axes) != 0:
+        # Try the data axis alone before giving up.
+        axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        if not axes or batch % mesh_extent(mesh, axes) != 0:
+            return PartitionSpec(*([None] * ndim))
+    return PartitionSpec(axes if len(axes) > 1 else axes[0],
+                         *([None] * (ndim - 1)))
+
+
+def input_shardings(mesh: Mesh, batch_specs) -> dict:
+    """Shardings for a train/prefill input tree: batch on ("pod","data")."""
+    def one(s):
+        return NamedSharding(mesh, batch_pspec(mesh, s.shape[0], len(s.shape)))
+    return jax.tree.map(one, batch_specs)
+
+
+# KV-cache leaves that carry kv-heads on axis -2.
+_KV_KEYS = ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v",
+            "dense_k", "dense_v", "img_k", "img_v")
+
+
+def cache_shardings(mesh: Mesh, cache_specs, batch: int):
+    """Shardings for a decode cache tree.
+
+    Batch: the first axis whose size equals ``batch`` goes on
+    ("pod","data").  KV caches additionally shard kv-heads (axis -2) on
+    "model"; SSM/xLSTM state tensors shard their head axis on "model" when
+    divisible.  This keeps the 500k-context caches within per-chip HBM.
+    """
+    model = mesh.shape.get("model", 1)
+    dp = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    dp_size = mesh_extent(mesh, dp) if dp else 1
+
+    def one(path, s):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        parts: list = [None] * len(s.shape)
+        for i, d in enumerate(s.shape):
+            if d == batch and dp and batch % dp_size == 0:
+                parts[i] = dp if len(dp) > 1 else dp[0]
+                break
+        if key in _KV_KEYS and len(s.shape) >= 4 \
+                and s.shape[-2] % model == 0 and model > 1:
+            parts[-2] = "model"
+        elif key in ("S", "C", "conv") and len(s.shape) >= 4 and model > 1:
+            # ssm state [.., B, H, N, P] / conv [.., B, K-1, C] — shard the
+            # widest trailing axis divisible by model.
+            for i in range(len(s.shape) - 1, 1, -1):
+                if parts[i] is None and s.shape[i] % model == 0 \
+                        and s.shape[i] >= model:
+                    parts[i] = "model"
+                    break
+        return NamedSharding(mesh, PartitionSpec(*parts))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

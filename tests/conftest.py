@@ -1,0 +1,34 @@
+"""Shared fixtures: a small synthetic census + points with ground truth.
+
+NOTE: device count must stay 1 here (the multi-pod dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 in its own process).
+Sharding tests spawn subprocesses with their own XLA_FLAGS.
+"""
+import numpy as np
+import pytest
+
+from repro.core.synth import build_synth_census
+
+
+@pytest.fixture(scope="session")
+def synth_small():
+    return build_synth_census(seed=0, n_states=8, counties_per_state=4,
+                              blocks_per_county=16)
+
+
+@pytest.fixture(scope="session")
+def synth_mid():
+    return build_synth_census(seed=1, n_states=16, counties_per_state=8,
+                              blocks_per_county=24)
+
+
+@pytest.fixture(scope="session")
+def points_small(synth_small):
+    rng = np.random.default_rng(42)
+    return synth_small.sample_points(rng, 4096)
+
+
+@pytest.fixture(scope="session")
+def points_mid(synth_mid):
+    rng = np.random.default_rng(43)
+    return synth_mid.sample_points(rng, 8192)

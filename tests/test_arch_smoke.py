@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward and one decode step on CPU, asserting shapes and no NaNs.
+Full configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_reduced_config
+from repro.configs.base import RunConfig, shapes_for
+from repro.models.model import build_model, input_specs
+from repro.models.module import init_params
+
+RUN = RunConfig(remat="none", attn_chunk_q=32, attn_chunk_kv=32,
+                ssm_chunk=16)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.full((B, S), 3, jnp.int32)}
+    if cfg.family == "vlm":
+        batch["img"] = jnp.ones((B, cfg.n_img_tokens, cfg.d_vision),
+                                jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_reduced_forward_and_decode(name):
+    cfg = get_reduced_config(name)
+    m = build_model(cfg)
+    params = init_params(m.specs, jax.random.key(0))
+    logits, aux = m.forward(params, RUN, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    cache = m.init_cache(B, 64)
+    for _ in range(2):
+        lg, cache = m.decode_step(params, RUN,
+                                  jnp.full((B, 1), 3, jnp.int32), cache)
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert int(cache["pos"]) == 2
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_matches_assignment(name):
+    """The FULL configs carry the exact published hyperparameters."""
+    cfg = get_config(name)
+    expect = {
+        "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    }[name]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect, (name, got, expect)
+    if name == "deepseek-v2-236b":
+        assert cfg.mla and cfg.kv_lora == 512
+        assert cfg.n_experts == 160 and cfg.top_k == 6
+        assert cfg.n_shared_experts == 2
+    if name == "mixtral-8x7b":
+        assert cfg.n_experts == 8 and cfg.top_k == 2
+        assert cfg.sliding_window == 4096
+    if name == "zamba2-1.2b":
+        assert cfg.ssm_state == 64
+    # long_500k applicability (DESIGN.md §4).
+    subq = name in ("zamba2-1.2b", "xlstm-1.3b", "mixtral-8x7b")
+    assert cfg.subquadratic == subq
+    n_shapes = 4 if subq else 3
+    assert len(shapes_for(cfg)) == n_shapes
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_input_specs_no_allocation(name):
+    cfg = get_reduced_config(name)
+    m = build_model(cfg)
+    for shape in shapes_for(cfg):
+        small = type(shape)(shape.name, 64, 2, shape.kind)
+        specs = input_specs(cfg, small, model=m)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)

@@ -1,0 +1,147 @@
+"""End-to-end correctness of the simple and fast mapping approaches against
+synthetic ground truth, plus the paper's headline structural claims.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cells import build_cell_covering
+from repro.core.fast import FastConfig, FastIndex, assign_fast
+from repro.core.simple import SimpleConfig, SimpleIndex, assign_simple
+
+
+@pytest.fixture(scope="module")
+def simple_index(synth_small):
+    return SimpleIndex.from_census(synth_small.census)
+
+
+@pytest.fixture(scope="module")
+def covering(synth_small):
+    return build_cell_covering(synth_small.census, max_level=8, max_cand=8)
+
+
+@pytest.fixture(scope="module")
+def fast_index(covering, synth_small):
+    return FastIndex.from_covering(covering, synth_small.census, gbits=4)
+
+
+def test_simple_exact_vs_ground_truth(simple_index, points_small):
+    xy, bid, cid, sid = points_small
+    cfg = SimpleConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                       cap_block=1.0)
+    s, c, b, stats = assign_simple(simple_index, jnp.asarray(xy), cfg)
+    np.testing.assert_array_equal(np.asarray(s), sid)
+    np.testing.assert_array_equal(np.asarray(c), cid)
+    np.testing.assert_array_equal(np.asarray(b), bid)
+    for lvl in ("state", "county", "block"):
+        assert int(stats[lvl]["overflow"]) == 0
+
+
+def test_simple_capacity_overflow_is_reported(simple_index, points_small):
+    xy, *_ = points_small
+    cfg = SimpleConfig(backend="ref", cap_state=0.01, cap_county=0.01,
+                       cap_block=0.01)
+    *_, stats = assign_simple(simple_index, jnp.asarray(xy), cfg)
+    # With absurdly small capacity some level must overflow (and say so).
+    total = sum(int(stats[lvl]["overflow"]) for lvl in stats)
+    assert total > 0
+
+
+def test_simple_pip_fraction_close_to_paper(simple_index, points_mid,
+                                            synth_mid):
+    """Paper §III: ~20 % of points need a PIP test at a level (~0.2/pt)."""
+    xy, *_ = points_mid
+    idx = SimpleIndex.from_census(synth_mid.census)
+    cfg = SimpleConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                       cap_block=1.0)
+    *_, stats = assign_simple(idx, jnp.asarray(xy), cfg)
+    for lvl in ("state", "county", "block"):
+        frac = int(stats[lvl]["n_multi"]) / len(xy)
+        assert 0.05 < frac < 0.40, (lvl, frac)
+
+
+def test_covering_is_partition(covering):
+    covering.validate_partition()
+
+
+def test_fast_exact_vs_ground_truth(fast_index, points_small):
+    xy, bid, cid, sid = points_small
+    cfg = FastConfig(mode="exact", cap_boundary=1.0, backend="ref")
+    s, c, b, stats = assign_fast(fast_index, jnp.asarray(xy), cfg)
+    np.testing.assert_array_equal(np.asarray(b), bid)
+    np.testing.assert_array_equal(np.asarray(c), cid)
+    np.testing.assert_array_equal(np.asarray(s), sid)
+    assert int(stats["overflow"]) == 0
+
+
+def test_fast_true_hit_filtering_beats_simple(fast_index, simple_index,
+                                              points_small):
+    """The paper's §IV claim: interior cells resolve most points with zero
+    PIP tests, so the fast approach does fewer PIP evals than simple."""
+    xy, *_ = points_small
+    _, _, _, fstats = assign_fast(fast_index, jnp.asarray(xy),
+                                  FastConfig(mode="exact", cap_boundary=1.0,
+                                             backend="ref"))
+    _, _, _, sstats = assign_simple(simple_index, jnp.asarray(xy),
+                                    SimpleConfig(backend="ref", cap_state=1.0,
+                                                 cap_county=1.0,
+                                                 cap_block=1.0))
+    fast_pip = int(fstats["n_pip"])
+    simple_pip = sum(int(sstats[lvl]["n_pip"]) for lvl in sstats)
+    assert fast_pip < simple_pip
+
+
+def test_fast_approx_error_bounded(fast_index, covering, synth_small,
+                                   points_small):
+    """Approximate mode: wrong assignments only for boundary-cell points,
+    and the assigned block is within one leaf-cell diagonal of the point."""
+    xy, bid, *_ = points_small
+    s, c, b, _ = assign_fast(fast_index, jnp.asarray(xy),
+                             FastConfig(mode="approx", backend="ref"))
+    b = np.asarray(b)
+    wrong = b != bid
+    # Error rate is bounded by the boundary-cell hit rate.
+    _, _, _, st = assign_fast(fast_index, jnp.asarray(xy),
+                              FastConfig(mode="exact", cap_boundary=1.0,
+                                         backend="ref"))
+    assert wrong.mean() <= int(st["n_boundary"]) / len(xy) + 1e-9
+    # Distance from a wrongly-assigned point to its assigned block's bbox is
+    # within the leaf cell diagonal (the paper's precision guarantee).
+    x0, x1, y0, y1 = synth_small.census.extent
+    n = 1 << covering.max_level
+    diag = np.hypot((x1 - x0) / n, (y1 - y0) / n)
+    bb = synth_small.census.blocks.bbox
+    for i in np.nonzero(wrong)[0]:
+        box = bb[b[i]]
+        dx = max(box[0] - xy[i, 0], 0, xy[i, 0] - box[1])
+        dy = max(box[2] - xy[i, 1], 0, xy[i, 1] - box[3])
+        assert np.hypot(dx, dy) <= diag + 1e-6
+
+
+def test_fast_gbits_variants_agree(covering, synth_small, points_small):
+    """F1/F2/F4 analogue: top-grid depth changes perf, never results."""
+    xy, *_ = points_small
+    outs = []
+    for gbits in (0, 2, 5):
+        idx = FastIndex.from_covering(covering, synth_small.census,
+                                      gbits=gbits)
+        _, _, b, _ = assign_fast(idx, jnp.asarray(xy),
+                                 FastConfig(mode="exact", cap_boundary=1.0,
+                                            backend="ref"))
+        outs.append(np.asarray(b))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_hierarchy_consistency(simple_index, points_small, synth_small):
+    """block -> county -> state derived parents must match direct assigns."""
+    xy, *_ = points_small
+    s, c, b, _ = assign_simple(simple_index, jnp.asarray(xy),
+                               SimpleConfig(backend="ref", cap_state=1.0,
+                                            cap_county=1.0, cap_block=1.0))
+    blocks = synth_small.census.blocks
+    counties = synth_small.census.counties
+    np.testing.assert_array_equal(blocks.parent[np.asarray(b)],
+                                  np.asarray(c))
+    np.testing.assert_array_equal(counties.parent[np.asarray(c)],
+                                  np.asarray(s))

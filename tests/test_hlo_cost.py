@@ -1,0 +1,71 @@
+"""The HLO cost walker must be exact on controlled probes — it is the
+measurement layer behind §Roofline, so it gets its own tests
+(EXPERIMENTS.md §Perf lesson iii)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import cost_of
+
+
+def _compile(f, *shapes):
+    return jax.jit(f).lower(*[jax.ShapeDtypeStruct(s, jnp.float32)
+                              for s in shapes]).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def body(c, _):
+        return c @ jnp.ones((128, 128)), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=48)
+        return y
+
+    r = cost_of(_compile(f, (128, 128)).as_text())
+    want = 48 * 2 * 128 ** 3
+    np.testing.assert_allclose(r["flops"], want, rtol=0.01)
+
+
+def test_nested_scan_flops():
+    def inner(c, _):
+        return c @ jnp.ones((64, 64)), None
+
+    def outer(c, _):
+        y, _ = jax.lax.scan(inner, c, None, length=8)
+        return y, None
+
+    def g(x):
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    r = cost_of(_compile(g, (64, 64)).as_text())
+    np.testing.assert_allclose(r["flops"], 4 * 8 * 2 * 64 ** 3, rtol=0.01)
+
+
+def test_plain_matmul_flops_and_traffic():
+    def f(a, b):
+        return a @ b
+
+    c = _compile(f, (1024, 512), (512, 2048))
+    r = cost_of(c.as_text())
+    np.testing.assert_allclose(r["flops"], 2 * 1024 * 512 * 2048, rtol=0.01)
+    # result is 1024x2048 f32 = 8 MiB -> traffic proxy counts 2x result.
+    assert r["bytes"] >= 2 * 1024 * 2048 * 4
+
+
+def test_ys_stacking_not_overcounted():
+    """A scan stacking per-step outputs must count slices, not the whole
+    stacked buffer per step (the 14x xlstm artifact)."""
+    def body(c, _):
+        c = c * 1.5
+        return c, c
+
+    def f(x):
+        _, ys = jax.lax.scan(body, x, None, length=1024)
+        return ys
+
+    r = cost_of(_compile(f, (64, 4096)).as_text())
+    stack_bytes = 1024 * 64 * 4096 * 4
+    # Traffic must be O(stack) — buffer init (2x) + per-step slices (2x) +
+    # per-step compute copies (~4x) — NOT O(steps * stack) = 1024x.
+    assert r["bytes"] < 12 * stack_bytes, r["bytes"]

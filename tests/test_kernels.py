@@ -1,0 +1,183 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the ref.py oracle,
+sweeping shapes and dtypes, plus fp64 host-oracle ground truth and
+hypothesis property tests on the crossing-number geometry.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.geometry import point_in_polygon_host
+from repro.kernels import ops, ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def star_polygon(rng, n_verts, cx=0.0, cy=0.0, r0=0.5, r1=1.5):
+    """Random star-shaped (hence simple) polygon with n_verts vertices."""
+    th = np.sort(rng.uniform(0, 2 * np.pi, n_verts))
+    # Ensure distinct angles.
+    th += np.arange(n_verts) * 1e-9
+    r = rng.uniform(r0, r1, n_verts)
+    return np.stack([cx + r * np.cos(th), cy + r * np.sin(th)], -1)
+
+
+def ring_to_edges(ring):
+    nxt = np.roll(ring, -1, axis=0)
+    return np.concatenate([ring, nxt], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------- pip_one
+@pytest.mark.parametrize("n_pts", [7, 256, 1000])
+@pytest.mark.parametrize("n_verts", [3, 17, 600])
+def test_pip_one_shapes(n_pts, n_verts):
+    rng = np.random.default_rng(n_pts * 1000 + n_verts)
+    ring = star_polygon(rng, n_verts)
+    pts = rng.uniform(-2, 2, (n_pts, 2)).astype(np.float32)
+    edges = ring_to_edges(ring)
+    want = np.asarray(ref.pip_one(jnp.asarray(pts), jnp.asarray(edges)))
+    got = np.asarray(ops.pip_one(jnp.asarray(pts), jnp.asarray(edges),
+                                 backend="interpret"))
+    np.testing.assert_array_equal(got, want)
+    # fp64 host oracle (points are generic, nowhere near edges w.p. 1).
+    host = point_in_polygon_host(pts[:, 0], pts[:, 1], ring)
+    assert (got == host).mean() > 0.999
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+@pytest.mark.parametrize("n_pts,n_edges", [(64, 40), (300, 513)])
+def test_pip_gathered_matches_ref(n_pts, n_edges, dtype):
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-2, 2, (n_pts, 2)).astype(dtype)
+    # Each point gets its own random star polygon, padded with degenerate
+    # (zero-length) edges like production edge tables.
+    edges = np.zeros((n_pts, n_edges, 4), dtype)
+    for i in range(n_pts):
+        nv = int(rng.integers(3, min(n_edges, 12) + 1))
+        e = ring_to_edges(star_polygon(rng, nv))
+        edges[i, :nv] = e
+        edges[i, nv:] = e[0, 0:1].repeat(4)[None, :] * 0 + np.array(
+            [e[0, 0], e[0, 1], e[0, 0], e[0, 1]], dtype)
+    want = np.asarray(ref.pip_gathered(jnp.asarray(pts), jnp.asarray(edges)))
+    got = np.asarray(ops.pip_gathered(jnp.asarray(pts), jnp.asarray(edges),
+                                      backend="interpret"))
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------- property
+@hypothesis.given(
+    n_verts=st.integers(3, 40),
+    n_pts=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pip_property_matches_fp64_host(n_verts, n_pts, seed):
+    """Kernel agrees with the fp64 host oracle on random star polygons."""
+    rng = np.random.default_rng(seed)
+    ring = star_polygon(rng, n_verts)
+    pts = rng.uniform(-2, 2, (n_pts, 2))
+    host = point_in_polygon_host(pts[:, 0], pts[:, 1], ring)
+    got = np.asarray(ref.pip_one(jnp.asarray(pts.astype(np.float32)),
+                                 jnp.asarray(ring_to_edges(ring))))
+    # fp32 vs fp64 can disagree only within ~1e-6 of an edge; measure-zero
+    # for uniform points, but tolerate a single straddler.
+    assert (got == host).mean() >= 1.0 - 1.0 / max(n_pts, 1) * 0.999 or \
+        (got == host).all()
+
+
+@hypothesis.given(
+    n_verts=st.integers(3, 30),
+    seed=st.integers(0, 2**31 - 1),
+    dx=st.floats(-5, 5), dy=st.floats(-5, 5),
+)
+def test_pip_translation_invariance(n_verts, seed, dx, dy):
+    rng = np.random.default_rng(seed)
+    ring = star_polygon(rng, n_verts)
+    pts = rng.uniform(-2, 2, (16, 2)).astype(np.float32)
+    base = np.asarray(ref.pip_one(jnp.asarray(pts),
+                                  jnp.asarray(ring_to_edges(ring))))
+    shift = np.array([dx, dy], np.float32)
+    moved = np.asarray(ref.pip_one(jnp.asarray(pts + shift),
+                                   jnp.asarray(ring_to_edges(
+                                       (ring + shift).astype(np.float64)))))
+    # Allow fp rounding flips right at edges: require >= 15/16 agreement.
+    assert (base == moved).sum() >= 15
+
+
+@hypothesis.given(
+    n_verts=st.integers(3, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pip_orientation_invariance(n_verts, seed):
+    """Reversing the ring (CW vs CCW) must not change inside/outside."""
+    rng = np.random.default_rng(seed)
+    ring = star_polygon(rng, n_verts)
+    pts = rng.uniform(-2, 2, (32, 2)).astype(np.float32)
+    a = np.asarray(ref.pip_one(jnp.asarray(pts),
+                               jnp.asarray(ring_to_edges(ring))))
+    b = np.asarray(ref.pip_one(jnp.asarray(pts),
+                               jnp.asarray(ring_to_edges(ring[::-1]))))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_pip_point_outside_bbox_is_outside():
+    rng = np.random.default_rng(3)
+    ring = star_polygon(rng, 12)
+    far = np.array([[10.0, 10.0], [-10.0, 0.0], [0.0, 99.0]], np.float32)
+    got = np.asarray(ref.pip_one(jnp.asarray(far),
+                                 jnp.asarray(ring_to_edges(ring))))
+    assert not got.any()
+
+
+# ------------------------------------------------------------------ bbox
+@pytest.mark.parametrize("n_pts,n_boxes", [(10, 3), (600, 130), (512, 512)])
+def test_bbox_mask_shapes(n_pts, n_boxes):
+    rng = np.random.default_rng(n_pts + n_boxes)
+    pts = rng.uniform(-2, 2, (n_pts, 2)).astype(np.float32)
+    lo = rng.uniform(-2, 1.5, (n_boxes, 2))
+    wh = rng.uniform(0.1, 1.0, (n_boxes, 2))
+    boxes = np.stack([lo[:, 0], lo[:, 0] + wh[:, 0],
+                      lo[:, 1], lo[:, 1] + wh[:, 1]], -1).astype(np.float32)
+    want = np.asarray(ref.bbox_mask(jnp.asarray(pts), jnp.asarray(boxes)))
+    got = np.asarray(ops.bbox_mask(jnp.asarray(pts), jnp.asarray(boxes),
+                                   backend="interpret"))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n_pts,c", [(16, 4), (300, 33), (512, 128)])
+def test_bbox_count_select_shapes(n_pts, c):
+    rng = np.random.default_rng(n_pts + c)
+    pts = rng.uniform(-2, 2, (n_pts, 2)).astype(np.float32)
+    lo = rng.uniform(-2, 1.5, (n_pts, c, 2))
+    wh = rng.uniform(0.1, 1.5, (n_pts, c, 2))
+    boxes = np.stack([lo[..., 0], lo[..., 0] + wh[..., 0],
+                      lo[..., 1], lo[..., 1] + wh[..., 1]],
+                     -1).astype(np.float32)
+    wc, ws = ref.bbox_count_select(jnp.asarray(pts), jnp.asarray(boxes))
+    gc, gs = ops.bbox_count_select(jnp.asarray(pts), jnp.asarray(boxes),
+                                   backend="interpret")
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_bbox_count_matches_mask_rowsum(seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(-2, 2, (64, 2)).astype(np.float32)
+    lo = rng.uniform(-2, 1.5, (64, 8, 2))
+    wh = rng.uniform(0.1, 1.5, (64, 8, 2))
+    boxes = np.stack([lo[..., 0], lo[..., 0] + wh[..., 0],
+                      lo[..., 1], lo[..., 1] + wh[..., 1]],
+                     -1).astype(np.float32)
+    cnt, sel = ref.bbox_count_select(jnp.asarray(pts), jnp.asarray(boxes))
+    mask = np.asarray(ref.bbox_mask_gathered(jnp.asarray(pts),
+                                             jnp.asarray(boxes)))
+    np.testing.assert_array_equal(np.asarray(cnt), mask.sum(1))
+    has = mask.any(1)
+    sel = np.asarray(sel)
+    assert (sel[~has] == -1).all()
+    rows = np.arange(64)[has]
+    assert mask[rows, sel[has]].all()

@@ -1,0 +1,185 @@
+"""Model-math correctness: blockwise attention vs naive softmax, GQA
+grouping, SWA masks, MLA decode-vs-train agreement, chunked SSM/mLSTM vs
+recurrent references, MoE dispatch properties.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import ssm, xlstm
+from repro.models.attention import blockwise_attn, decode_attn
+from repro.models.module import init_params
+
+hypothesis.settings.register_profile(
+    "models", deadline=None, max_examples=20,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("models")
+
+
+def naive_attn(q, k, v, causal=True, window=None):
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, s, kh, g, d)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k) / np.sqrt(d)
+    sc = sc.astype(jnp.float32)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    sc = jnp.where(ok[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return o.reshape(b, s, h, d)
+
+
+@pytest.mark.parametrize("s,h,kh,window", [(32, 4, 4, None), (33, 4, 2, None),
+                                           (64, 8, 1, None), (48, 4, 4, 16)])
+def test_blockwise_attn_matches_naive(s, h, kh, window):
+    rng = np.random.default_rng(0)
+    b, d = 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, d)), jnp.float32)
+    want = naive_attn(q, k, v, causal=True, window=window)
+    got = blockwise_attn(q, k, v, causal=True, window=window,
+                         chunk_q=16, chunk_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
+@hypothesis.given(chunk=st.sampled_from([8, 16, 32, 64]),
+                  seed=st.integers(0, 10_000))
+def test_blockwise_attn_chunk_invariance(chunk, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 8)), jnp.float32)
+    a = blockwise_attn(q, k, v, causal=True, chunk_q=64, chunk_kv=64)
+    b = blockwise_attn(q, k, v, causal=True, chunk_q=chunk, chunk_kv=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_decode_attn_matches_last_row_of_blockwise():
+    rng = np.random.default_rng(1)
+    b, t, h, kh, d = 2, 24, 4, 2, 8
+    q_full = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kh, d)), jnp.float32)
+    full = blockwise_attn(q_full, k, v, causal=True, chunk_q=8, chunk_kv=8)
+    dec = decode_attn(q_full[:, -1:], k, v, t)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-3)
+
+
+# ----------------------------------------------------- ssm / xlstm oracles
+def test_mamba2_chunked_equals_recurrent():
+    cfg = ModelConfig(name="t", family="ssm_hybrid", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab=10,
+                      ssm_state=16, ssm_head_dim=8)
+    params = init_params(ssm.mamba2_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 24, 32)) * 0.5
+    y = ssm.mamba2(params, cfg, x, chunk=8)
+    st_ = ssm.mamba2_init_state(cfg, 2, 32)
+    ys = []
+    for t in range(24):
+        yt, st_ = ssm.mamba2_step(params, cfg, x[:, t:t + 1], st_)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               atol=5e-4)
+
+
+def test_mlstm_chunked_equals_recurrent():
+    cfg = ModelConfig(name="t", family="xlstm", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab=10)
+    params = init_params(xlstm.mlstm_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 24, 32)) * 0.5
+    y = xlstm.mlstm(params, cfg, x, chunk=8)
+    st_ = xlstm.mlstm_init_state(cfg, 2)
+    ys = []
+    for t in range(24):
+        yt, st_ = xlstm.mlstm_step(params, cfg, x[:, t:t + 1], st_)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               atol=5e-4)
+
+
+# ------------------------------------------------------------ moe dispatch
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  n=st.integers(4, 200), nb=st.integers(1, 8),
+                  cap=st.integers(1, 32))
+def test_dispatch_roundtrip_properties(seed, n, nb, cap):
+    """plan_routes/slot_tables invariants: kept items occupy unique slots;
+    drops are exactly the over-capacity tail; combine preserves payload."""
+    from repro.distributed.dispatch import gather_from_buckets, \
+        plan_routes, scatter_to_buckets, slot_tables
+    rng = np.random.default_rng(seed)
+    buckets = jnp.asarray(rng.integers(0, nb + 1, n), jnp.int32)  # nb = drop
+    plan = plan_routes(buckets, nb, cap)
+    keep = np.asarray(plan.keep)
+    flat = np.asarray(plan.flat_ix)
+    # kept slots are unique and in range
+    kept_slots = flat[keep]
+    assert len(set(kept_slots.tolist())) == keep.sum()
+    assert (kept_slots < nb * cap).all()
+    # per-bucket counts respect capacity and drop accounting is exact
+    b_np = np.asarray(buckets)
+    expect_drop = sum(max(0, (b_np == i).sum() - cap) for i in range(nb))
+    assert int(plan.n_dropped) == expect_drop
+    # roundtrip: scatter payload then gather with weight 1 reproduces kept
+    payload = jnp.asarray(rng.normal(size=(n, 4)), jnp.float32)
+    tabs = slot_tables(plan, nb, cap)
+    buf = scatter_to_buckets(plan, payload, nb, cap, item_for_slot=tabs[0])
+    out = gather_from_buckets(tabs, buf, n)
+    out = np.asarray(out)
+    # kept items come back exactly; dropped items are zero
+    kept_items = np.zeros(n, bool)
+    kept_items[np.asarray(plan.order)[keep]] = True
+    np.testing.assert_allclose(out[kept_items],
+                               np.asarray(payload)[kept_items], atol=1e-6)
+    assert (out[~kept_items] == 0).all()
+
+
+def test_moe_sharded_matches_local_subprocess():
+    import os
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.moe import moe_spec, moe_ffn
+from repro.models.module import init_params
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_test_mesh
+for ne, mdl in ((8, 4), (2, 4)):   # EP and virtual-expert paths
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=0, vocab=10,
+                      n_experts=ne, top_k=2, d_ff_expert=16,
+                      capacity_factor=8.0)
+    params = init_params(moe_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, 8, 32), jnp.bfloat16)
+    y_ref, aux_ref = moe_ffn(params, cfg, x)
+    mesh = make_test_mesh((2, mdl))
+    with jax.set_mesh(mesh):
+        y, aux = jax.jit(lambda p, x: moe_ffn(p, cfg, x, mesh=mesh))(params, x)
+    err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref.astype(jnp.float32))))
+    assert err < 0.2, (ne, mdl, err)
+    assert abs(float(aux["lb_loss"]) - float(aux_ref["lb_loss"])) < 1e-2
+print("MOE_SHARDED_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True,
+                         env={**os.environ, "PYTHONPATH": "src"},
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "MOE_SHARDED_OK" in out.stdout, out.stderr[-2000:]

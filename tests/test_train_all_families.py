@@ -1,0 +1,53 @@
+"""One real optimizer step for every architecture family: gradients must
+flow (finite, params change) through Mamba2 chunked scans, mLSTM/sLSTM,
+enc-dec cross-attention, VLM gated cross-attention, MLA and MoE dispatch —
+not just the dense path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.configs.base import RunConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import build_model
+from repro.models.module import init_params
+from repro.optim import adamw
+from repro.runtime.steps import make_train_step
+
+RUN = RunConfig(remat="none", attn_chunk_q=16, attn_chunk_kv=16,
+                ssm_chunk=8, learning_rate=1e-3, warmup_steps=1,
+                total_steps=10)
+
+FAMILY_REPS = ("yi-9b",                 # dense GQA
+               "seamless-m4t-medium",   # enc-dec
+               "llama-3.2-vision-90b",  # vlm cross-attn
+               "zamba2-1.2b",           # mamba2 hybrid
+               "xlstm-1.3b",            # mLSTM + sLSTM
+               "deepseek-v2-236b")      # MLA + MoE
+
+
+@pytest.mark.parametrize("name", FAMILY_REPS)
+def test_one_train_step_grads_flow(name):
+    cfg = get_reduced_config(name)
+    model = build_model(cfg)
+    params = init_params(model.specs, jax.random.key(0))
+    opt = adamw.init(params)
+    src = SyntheticLM(cfg=cfg, batch=2, seq=16)
+    step = jax.jit(make_train_step(model, RUN))
+    batch = src.batch_at(0)
+    p1, o1, m1 = step(params, opt, batch)
+    p2, o2, m2 = step(p1, o1, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m1["grad_norm"]) > 0
+    # Every parameter leaf must receive a finite update...
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert bool(jnp.all(jnp.isfinite(b))), name
+    # ...and the model must actually learn the repeated batch a little.
+    assert float(m2["loss"]) < float(m1["loss"]) + 1e-3, (name,
+                                                          float(m1["loss"]),
+                                                          float(m2["loss"]))
+    # No dead subtrees: the overwhelming majority of leaves move.
+    moved = [not np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))]
+    assert np.mean(moved) > 0.9, (name, np.mean(moved))
