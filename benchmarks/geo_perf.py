@@ -1,8 +1,14 @@
-"""Geo-engine perf hillclimb harness: stage-level wall-clock breakdown of
-the fast approach on CPU (the paper-representative cell of §Perf).
+"""Geo-engine perf hillclimb harness: points/sec for every GeoEngine
+strategy plus the fast path's stage-level breakdown, on CPU (the
+paper-representative cell of §Perf).
 
     PYTHONPATH=src python -m benchmarks.geo_perf
+
+Emits ``results/BENCH_geo.json`` — machine-readable points/sec + accuracy
+per strategy — so the bench trajectory accumulates across PRs.
 """
+import json
+import os
 import time
 
 import jax
@@ -10,8 +16,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core.fast import FastConfig, FastIndex, assign_fast, \
-    leaf_codes, locate_cells
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.core.fast import FastIndex, leaf_codes, locate_cells
+
+N_POINTS = int(os.environ.get("BENCH_GEO_N", 1_000_000))
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "BENCH_geo.json")
 
 
 def t(fn, *a, r=5):
@@ -25,28 +35,76 @@ def t(fn, *a, r=5):
     return float(np.median(ts))
 
 
-def main():
-    census = common.get_census().census
-    cov = common.get_covering(9)
-    n = 1_000_000
-    xy, bid, *_ = common.sample_points(n)
-    pts = jnp.asarray(xy)
-    print(f"n={n} points, {len(cov.lo)} cells")
+def bench_strategies(census, cov, pts, bid):
+    """points/sec + accuracy for simple / fast-exact / fast-approx /
+    hybrid, all through the GeoEngine facade."""
+    n = pts.shape[0]
+    results = {}
+    specs = {
+        "simple": ("simple", EngineConfig()),
+        "fast_exact": ("fast", EngineConfig(mode="exact")),
+        "fast_approx": ("fast", EngineConfig(mode="approx")),
+        "hybrid": ("hybrid", EngineConfig()),
+    }
+    for name, (strategy, cfg) in specs.items():
+        eng = GeoEngine.build(census, strategy, cfg, covering=cov)
+        f = jax.jit(lambda p, e=eng: e.assign(p).block)
+        dt = t(f, pts)
+        acc = float(np.mean(np.asarray(f(pts)) == bid))
+        results[name] = {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
+                         "accuracy": acc}
+        print(f"{name:12s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
+              f"acc {acc:.4f}")
+    return results
 
+
+def bench_fast_stages(census, cov, pts, bid):
+    """The original gbits sweep: stage-level breakdown of the fast path."""
+    n = pts.shape[0]
     for gbits in (0, 4, 6):
         idx = FastIndex.from_covering(cov, census, gbits=gbits)
         dt_codes = t(jax.jit(lambda p: leaf_codes(idx, p)), pts)
         codes = leaf_codes(idx, pts)
         dt_locate = t(jax.jit(lambda c: locate_cells(idx, c)), codes)
         for mode in ("approx", "exact"):
-            cfg = FastConfig(mode=mode, cap_boundary=0.25)
-            f = jax.jit(lambda p: assign_fast(idx, p, cfg)[2])
+            eng = GeoEngine(
+                "fast", EngineConfig(mode=mode, cap_boundary=0.25),
+                fast_index=idx)
+            f = jax.jit(lambda p, e=eng: e.assign(p).block)
             dt_full = t(f, pts)
             acc = float(np.mean(np.asarray(f(pts)) == bid))
             print(f"G{gbits} {mode:6s}: full {dt_full*1e3:7.1f}ms "
                   f"({n/dt_full/1e6:5.2f}M pts/s) | codes "
                   f"{dt_codes*1e3:5.1f}ms locate {dt_locate*1e3:6.1f}ms "
                   f"(iters={idx.search_iters}) | acc {acc:.4f}")
+
+
+def main():
+    census = common.get_census().census
+    cov = common.get_covering(9)
+    xy, bid, *_ = common.sample_points(N_POINTS)
+    pts = jnp.asarray(xy)
+    print(f"n={N_POINTS} points, {len(cov.lo)} cells")
+
+    results = bench_strategies(census, cov, pts, bid)
+    bench_fast_stages(census, cov, pts, bid)
+
+    run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "n_points": N_POINTS, "n_cells": int(len(cov.lo)),
+           "backend": jax.default_backend(), "strategies": results}
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    # Append to the run trajectory so successive benchmarks are comparable.
+    runs = []
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                runs = json.load(f).get("runs", [])
+        except (json.JSONDecodeError, AttributeError):
+            runs = []
+    runs.append(run)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"runs": runs}, f, indent=2)
+    print(f"wrote {os.path.normpath(OUT_PATH)} ({len(runs)} runs)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
-"""Quickstart: map locations onto census blocks with both paper approaches.
+"""Quickstart: map locations onto census blocks with every GeoEngine
+strategy — the paper's simple (§III) and fast (§IV) approaches plus the
+engine's hybrid mode.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,10 +9,17 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cells import build_cell_covering
-from repro.core.fast import FastConfig, FastIndex, assign_fast
-from repro.core.simple import SimpleConfig, SimpleIndex, assign_simple
+from repro.core.engine import EngineConfig, GeoEngine
 from repro.core.synth import build_synth_census
+
+
+def timed_assign(engine, pts):
+    res = engine.assign(pts)                  # warm up + compile
+    res.block.block_until_ready()
+    t0 = time.perf_counter()
+    res = engine.assign(pts)
+    res.block.block_until_ready()
+    return res, time.perf_counter() - t0
 
 
 def main():
@@ -28,42 +37,25 @@ def main():
     xy, bid, cid, sid = sc.sample_points(rng, 100_000)
     pts = jnp.asarray(xy)
 
-    # 3. SIMPLE approach (paper §III): hierarchical bbox cascade + PIP.
-    sidx = SimpleIndex.from_census(census)
-    cfg = SimpleConfig(cap_state=0.5, cap_county=0.5, cap_block=0.5)
-    s, c, b, stats = assign_simple(sidx, pts, cfg)   # warm up + compile
-    t0 = time.perf_counter()
-    s, c, b, stats = assign_simple(sidx, pts, cfg)
-    b.block_until_ready()
-    dt = time.perf_counter() - t0
-    acc = float(np.mean(np.asarray(b) == bid))
-    pip = sum(int(stats[k]["n_pip"]) for k in stats) / len(xy)
-    print(f"simple: {len(xy)/dt/1e6:.2f}M pts/s, accuracy {acc:.4f}, "
-          f"{pip:.3f} PIP evals/pt")
-
-    # 4. FAST approach (paper §IV): true-hit-filter cell index.
+    # 3. One facade, four strategy/mode combinations.  The covering is
+    #    built once and shared by the cell-index strategies.
     print("building cell covering...")
-    cov = build_cell_covering(census, max_level=9)
-    fidx = FastIndex.from_covering(cov, census, gbits=4)
-    fcfg = FastConfig(mode="exact", cap_boundary=0.5)
-    *_, b2, fstats = assign_fast(fidx, pts, fcfg)
-    t0 = time.perf_counter()
-    s2, c2, b2, fstats = assign_fast(fidx, pts, fcfg)
-    b2.block_until_ready()
-    dt2 = time.perf_counter() - t0
-    acc2 = float(np.mean(np.asarray(b2) == bid))
-    print(f"fast (exact): {len(xy)/dt2/1e6:.2f}M pts/s, accuracy {acc2:.4f},"
-          f" {int(fstats['n_pip'])/len(xy):.3f} PIP evals/pt, "
-          f"index {fidx.nbytes()/1e6:.1f} MB")
-
-    *_, b3, _ = assign_fast(fidx, pts, FastConfig(mode="approx"))
-    t0 = time.perf_counter()
-    *_, b3, _ = assign_fast(fidx, pts, FastConfig(mode="approx"))
-    b3.block_until_ready()
-    dt3 = time.perf_counter() - t0
-    acc3 = float(np.mean(np.asarray(b3) == bid))
-    print(f"fast (approx): {len(xy)/dt3/1e6:.2f}M pts/s, accuracy {acc3:.4f}"
-          f" (error bounded by one leaf cell)")
+    covering = None
+    for label, strategy, cfg in (
+        ("simple      ", "simple",
+         EngineConfig(cap_state=0.5, cap_county=0.5, cap_block=0.5)),
+        ("fast (exact)", "fast", EngineConfig(mode="exact",
+                                              cap_boundary=0.5)),
+        ("fast (approx)", "fast", EngineConfig(mode="approx")),
+        ("hybrid      ", "hybrid", EngineConfig(cap_boundary=0.5)),
+    ):
+        engine = GeoEngine.build(census, strategy, cfg, covering=covering)
+        covering = covering or engine.covering
+        res, dt = timed_assign(engine, pts)
+        acc = float(np.mean(np.asarray(res.block) == bid))
+        print(f"{label}: {len(xy)/dt/1e6:5.2f}M pts/s, accuracy {acc:.4f},"
+              f" {int(res.stats.n_pip)/len(xy):.3f} PIP evals/pt,"
+              f" overflow {int(res.stats.overflow)}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,11 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Layering (DESIGN.md §3):
+#   geometry/synth/cells  — host-side map + index construction
+#   compact/resolve       — the shared device-side resolution core
+#   simple/fast           — the paper's two strategies as thin drivers
+#   engine                — the GeoEngine facade (simple|fast|hybrid,
+#                           single-mesh and dispatch-routed sharded assign)
+#   distributed/enrich    — sharded lookup internals, pipeline operator

@@ -5,10 +5,43 @@
 unfilled slots.  An argsort-based compaction is O(N log N) and measured as
 the dominant cost of the exact fast path (§Perf geo iteration 4); prefix
 sums make it O(N).
+
+``capacity_for`` is the one place static buffer capacities are sized; every
+strategy routes its ``cap_*`` config fractions through it so caps are
+always lane-aligned and bounded by the batch (see core/resolve.py for the
+consumer).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def capacity_for(n: int, frac: float, *, floor: int = 256,
+                 quantum: int = 256, ceiling: int | None = None) -> int:
+    """Static compaction capacity for a batch of ``n``: ``n * frac``,
+    raised to ``floor``, rounded up to a ``quantum`` multiple (TPU lane
+    alignment), and clamped to ``ceiling`` (default ``n``)."""
+    cap = round_up(max(int(n * frac), floor), quantum)
+    return min(cap, n if ceiling is None else ceiling)
+
+
+def scatter_filled(prior: jnp.ndarray, idx: jnp.ndarray,
+                   slot_ok: jnp.ndarray, values: jnp.ndarray):
+    """Write ``values`` back through compacted slots, dropping unfilled
+    ones.
+
+    Unfilled slots from ``compact_indices`` all alias row 0 (zero-init),
+    so an unmasked duplicate-index scatter lets a stale write race the
+    real row-0 update (last write wins).  Rerouting unfilled slots to the
+    out-of-bounds sentinel with mode="drop" keeps every surviving write
+    unique.  This is the ONLY sanctioned write-back for compacted buffers.
+    """
+    n = prior.shape[0]
+    return prior.at[jnp.where(slot_ok, idx, n)].set(values, mode="drop")
 
 
 def compact_indices(mask: jnp.ndarray, cap: int):

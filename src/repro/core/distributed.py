@@ -27,9 +27,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as PS
 
 from repro.core.cells import CellCovering
-from repro.core.fast import FastConfig, FastIndex, leaf_codes, morton
+from repro.core.fast import FastConfig, quantize_codes
 from repro.core.geometry import CensusMap
+from repro.core.compact import capacity_for
+from repro.core.resolve import ResolveStats, resolve_candidates
 from repro.kernels import ops
+from repro.launch.mesh import shard_map
 
 
 @jax.tree_util.register_pytree_node_class
@@ -121,38 +124,33 @@ def shard_covering(cov: CellCovering, census: CensusMap,
         max_level=cov.max_level, n_shards=n_shards)
 
 
-def _local_lookup(idx: ShardedFastIndex, lo, hi, val, cand, codes, points,
-                  mode: str, cap: int, backend):
-    """Lookup of ``codes`` against ONE shard's table (padded rows inert)."""
+def local_lookup(block_edges, lo, hi, val, cand, codes, points,
+                 mode: str, cap: int, backend, active=None):
+    """Lookup of ``codes`` against ONE shard's table (padded rows inert).
+
+    ``active`` optionally masks rows (e.g. empty dispatch-buffer slots).
+    Boundary points go through the shared resolution core (sequential
+    schedule, centre-owner fallback).  Returns (bid, ResolveStats).
+    """
     pos = jnp.searchsorted(lo, codes, side="right") - 1
     pos = jnp.clip(pos, 0, lo.shape[0] - 1)
     found = (lo[pos] <= codes) & (codes <= hi[pos])
+    if active is not None:
+        found = found & active
     v = jnp.where(found, val[pos], -INT_MAX)
     bid = jnp.where(v >= 0, v, -1)
     is_b = found & (v < 0) & (v > -INT_MAX)
     brow = jnp.clip(-(v + 1), 0, cand.shape[0] - 1)
-    n_pip = jnp.zeros((), jnp.int32)
     if mode == "approx":
         bid = jnp.where(is_b, cand[brow, 0], bid)
+        rs = ResolveStats(n_need=jnp.sum(is_b.astype(jnp.int32)),
+                          n_pip=jnp.zeros((), jnp.int32),
+                          overflow=jnp.zeros((), jnp.int32))
     else:
-        order = jnp.argsort(jnp.where(is_b, 0, 1), stable=True)
-        sub = order[:cap]
-        sub_pts = points[sub]
-        sub_need = is_b[sub]
-        sub_cands = cand[brow[sub]]
-        assign = jnp.full(cap, -1, jnp.int32)
-        for k in range(cand.shape[1]):
-            pid = sub_cands[:, k]
-            active = sub_need & (pid >= 0) & (assign < 0)
-            edges = idx.block_edges[jnp.clip(pid, 0, None)]
-            inside = ops.pip_gathered(sub_pts, edges, backend=backend)
-            assign = jnp.where(active & inside, pid, assign)
-            n_pip = n_pip + jnp.sum(active.astype(jnp.int32))
-        fallback = jnp.where(sub_cands[:, 0] >= 0, sub_cands[:, 0], -1)
-        newv = jnp.where(sub_need,
-                         jnp.where(assign >= 0, assign, fallback), bid[sub])
-        bid = bid.at[sub].set(newv)
-    return bid, n_pip
+        bid, rs = resolve_candidates(
+            points, lambda i, _: cand[brow[i]], block_edges, is_b,
+            cap=cap, backend=backend, prior=bid, fallback="first")
+    return bid, rs
 
 
 def assign_fast_distributed(idx: ShardedFastIndex, points: jnp.ndarray,
@@ -164,35 +162,31 @@ def assign_fast_distributed(idx: ShardedFastIndex, points: jnp.ndarray,
     dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     n = points.shape[0]
     n_loc = n // dp_size
-    cap = max(256, int(n_loc * cfg.cap_boundary) // 256 * 256)
-    cap = min(cap, n_loc)
-
-    # Mirror of FastIndex.leaf_codes on the quant params.
-    fake = FastIndex(cell_lo=None, cell_hi=None, cell_val=None, cand=None,
-                     top_start=None, block_edges=None, block_parent=None,
-                     county_parent=None, quant=idx.quant,
-                     max_level=idx.max_level, gbits=0)
+    cap = capacity_for(n_loc, cfg.cap_boundary)
 
     def body(points_loc, lo, hi, val, cand, range_lo):
         lo, hi, val, cand = lo[0], hi[0], val[0], cand[0]
-        codes = leaf_codes(fake, points_loc)
-        bid, n_pip = _local_lookup(idx, lo, hi, val, cand, codes,
-                                   points_loc, cfg.mode, cap, cfg.backend)
+        codes = quantize_codes(idx.quant, idx.max_level, points_loc)
+        bid, rs = local_lookup(idx.block_edges, lo, hi, val, cand,
+                               codes, points_loc, cfg.mode, cap,
+                               cfg.backend)
         # Each point is owned by exactly one shard -> pmax combines.
         bid = jax.lax.pmax(bid, "model")
-        n_pip = jax.lax.psum(n_pip, "model")
-        if dp:
-            n_pip = jax.lax.psum(n_pip, dp)
-        return bid, n_pip
+        axes = ("model",) + dp
+        n_need = jax.lax.psum(rs.n_need, axes)
+        n_pip = jax.lax.psum(rs.n_pip, axes)
+        overflow = jax.lax.psum(rs.overflow, axes)
+        return bid, n_need, n_pip, overflow
 
     bspec = dp if dp else None
-    bid, n_pip = jax.shard_map(
+    bid, n_need, n_pip, overflow = shard_map(
         body, mesh=mesh,
         in_specs=(PS(bspec, None), PS("model", None), PS("model", None),
                   PS("model", None), PS("model", None, None), PS("model")),
-        out_specs=(PS(bspec), PS()),
+        out_specs=(PS(bspec), PS(), PS(), PS()),
     )(points, idx.cell_lo, idx.cell_hi, idx.cell_val, idx.cand,
       idx.range_lo)
     cid = jnp.where(bid >= 0, idx.block_parent[jnp.clip(bid, 0, None)], -1)
     sid = jnp.where(cid >= 0, idx.county_parent[jnp.clip(cid, 0, None)], -1)
-    return sid, cid, bid, {"n_pip": n_pip}
+    return sid, cid, bid, {"n_boundary": n_need, "n_pip": n_pip,
+                           "overflow": overflow}

@@ -1,0 +1,273 @@
+"""GeoEngine: one facade over every mapping strategy (DESIGN.md §3).
+
+``GeoEngine.build(census, strategy=..., cfg=...)`` constructs whatever
+indices the strategy needs and exposes two entry points:
+
+  * ``engine.assign(points)``            — single-mesh lookup;
+  * ``engine.assign_sharded(points, mesh)`` — the cell table Morton-sharded
+    over the mesh's "model" axis, with points *routed to their owning
+    shard* through the capacity-bucketed dispatch primitive shared with the
+    MoE layer (distributed/dispatch.py) — each shard then resolves only the
+    points it owns instead of scanning the full batch.
+
+Strategies:
+
+  * ``simple`` — the paper's §III hierarchical bbox cascade.
+  * ``fast``   — the paper's §IV true-hit-filter cell index
+                 (cfg.mode picks exact / approx boundary handling).
+  * ``hybrid`` — NEW: fast cell lookup for interior "true hits" (zero PIP
+    tests, identical to fast), but boundary/overflow points are routed
+    through the simple cascade's hierarchical PIP instead of the flat
+    candidate-list fallback; only points the cascade cannot place (bbox
+    grazing, capacity overflow) degrade to the centre-owner candidate.
+    Strictly better accuracy than ``fast(approx)`` at a fraction of
+    ``fast(exact)``'s candidate-PIP volume when boundary traffic is heavy.
+
+All strategies bottom out in core/resolve.py — the engine adds no PIP or
+compaction logic of its own, it only composes the drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fast as fast_mod
+from repro.core import simple as simple_mod
+from repro.core.cells import build_cell_covering
+from repro.core.compact import (capacity_for, compact_indices,
+                                scatter_filled)
+from repro.core.distributed import (ShardedFastIndex, local_lookup,
+                                    shard_covering)
+from repro.core.fast import (FastConfig, FastIndex, cell_values, parents_of,
+                             quantize_codes)
+from repro.core.geometry import CensusMap
+from repro.core.resolve import AssignResult, GeoStats
+from repro.core.simple import SimpleConfig, SimpleIndex
+from repro.distributed.dispatch import (plan_routes, scatter_to_buckets,
+                                        slot_tables)
+from repro.launch.mesh import shard_map
+
+STRATEGIES = ("simple", "fast", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine knobs (part of every jit cache key).
+
+    The per-strategy configs (SimpleConfig / FastConfig) are derived from
+    this one surface so callers tune a single object.
+    """
+
+    backend: str | None = None   # kernel backend override
+    k_cand: int = 4              # cascade PIP candidates per level
+    cap_state: float = 0.25      # cascade compaction fractions
+    cap_county: float = 0.5
+    cap_block: float = 0.5
+    mode: str = "exact"          # fast boundary handling: exact | approx
+    cap_boundary: float = 0.25   # fast/hybrid boundary compaction fraction
+    max_level: int = 9           # covering depth (fast/hybrid)
+    gbits: int = 4               # top-grid bits (fast/hybrid)
+    max_cand: int = 8            # boundary candidate list width
+    cap_shard: float = 2.0       # sharded assign: capacity factor vs N/S
+
+    def simple_cfg(self) -> SimpleConfig:
+        return SimpleConfig(k_cand=self.k_cand, cap_state=self.cap_state,
+                            cap_county=self.cap_county,
+                            cap_block=self.cap_block, backend=self.backend)
+
+    def fast_cfg(self) -> FastConfig:
+        return FastConfig(mode=self.mode, cap_boundary=self.cap_boundary,
+                          backend=self.backend)
+
+    def hybrid_cascade_cfg(self) -> SimpleConfig:
+        # The cascade only sees the (already compacted) boundary buffer, so
+        # run it at full capacity — the buffer IS the capacity limit.
+        return SimpleConfig(k_cand=self.k_cand, cap_state=1.0,
+                            cap_county=1.0, cap_block=1.0,
+                            backend=self.backend)
+
+
+@functools.partial(jax.jit, static_argnames=("scfg", "cap_frac"))
+def _assign_hybrid(findex: FastIndex, sindex: SimpleIndex,
+                   points: jnp.ndarray, scfg: SimpleConfig,
+                   cap_frac: float):
+    """Hybrid strategy: interior true hits from the cell index; boundary
+    points re-resolved through the hierarchical cascade."""
+    n = points.shape[0]
+    val = cell_values(findex, points)
+    bid = jnp.where(val >= 0, val, -1)
+    need = (val < 0) & (val > fast_mod.OUTSIDE)      # boundary cells
+    n_boundary = jnp.sum(need.astype(jnp.int32))
+
+    cap = capacity_for(n, cap_frac)
+    idx, slot_ok = compact_indices(need, cap)
+    sub_need = need[idx] & slot_ok
+    _, _, sub_bid, sub_stats = simple_mod.cascade_assign(
+        sindex, points[idx], scfg)
+    bid = scatter_filled(bid, idx, slot_ok,
+                         jnp.where(sub_need & (sub_bid >= 0),
+                                   sub_bid, bid[idx]))
+    overflow = n_boundary - jnp.sum(sub_need.astype(jnp.int32))
+    if findex.cand.shape[0] > 0:
+        # Cascade misses + capacity overflow degrade to the centre-owner
+        # candidate (the fast-approx answer) rather than staying lost.
+        brow = jnp.clip(-(val + 1), 0, findex.cand.shape[0] - 1)
+        bid = jnp.where(need & (bid < 0), findex.cand[brow, 0], bid)
+
+    cid, sid = parents_of(findex, bid)
+    n_pip = sum(lvl["n_pip"] for lvl in sub_stats.values())
+    stats = {"n_boundary": n_boundary, "n_pip": n_pip,
+             "overflow": overflow, "cascade": sub_stats}
+    return sid, cid, bid, stats
+
+
+def _sharded_assign(sidx: ShardedFastIndex, points: jnp.ndarray, mesh,
+                    cfg: FastConfig, capacity: int, cap_pip: int):
+    """Dispatch-routed sharded lookup: bucket points by owning Morton
+    shard, scatter into per-shard capacity buffers, look up shard-locally
+    under shard_map, gather results back by buffer slot."""
+    n = points.shape[0]
+    s = sidx.n_shards
+    codes = quantize_codes(sidx.quant, sidx.max_level, points)
+    owner = jnp.clip(
+        jnp.searchsorted(sidx.range_lo, codes, side="right") - 1, 0, s - 1
+    ).astype(jnp.int32)
+    plan = plan_routes(owner, s, capacity)
+    item_for_slot, _ = slot_tables(plan, s, capacity)        # [S*cap]
+    ok = item_for_slot >= 0
+    buf_pts = scatter_to_buckets(plan, points, s, capacity,
+                                 item_for_slot=item_for_slot
+                                 ).reshape(s, capacity, 2)
+    buf_ok = ok.reshape(s, capacity)
+
+    def body(pts_loc, ok_loc, lo, hi, val, cand):
+        pts_loc, ok_loc = pts_loc[0], ok_loc[0]
+        lo, hi, val, cand = lo[0], hi[0], val[0], cand[0]
+        codes_loc = quantize_codes(sidx.quant, sidx.max_level, pts_loc)
+        bid, rs = local_lookup(
+            sidx.block_edges, lo, hi, val, cand, codes_loc, pts_loc,
+            cfg.mode, cap_pip, cfg.backend, active=ok_loc)
+        return (bid[None], jax.lax.psum(rs.n_need, "model"),
+                jax.lax.psum(rs.n_pip, "model"),
+                jax.lax.psum(rs.overflow, "model"))
+
+    ps = jax.sharding.PartitionSpec
+    bid_buf, n_need, n_pip, pip_of = shard_map(
+        body, mesh=mesh,
+        in_specs=(ps("model"), ps("model"), ps("model"), ps("model"),
+                  ps("model"), ps("model")),
+        out_specs=(ps("model"), ps(), ps(), ps()),
+    )(buf_pts, buf_ok, sidx.cell_lo, sidx.cell_hi, sidx.cell_val,
+      sidx.cand)
+
+    dest = jnp.where(ok, item_for_slot, n)
+    bid = jnp.full((n + 1,), -1, jnp.int32).at[dest].set(
+        bid_buf.reshape(-1), mode="drop")[:n]
+    cid, sid = parents_of(sidx, bid)
+    stats = {"n_boundary": n_need, "n_pip": n_pip, "overflow": pip_of,
+             "n_dropped": plan.n_dropped}
+    return sid, cid, bid, stats
+
+
+class GeoEngine:
+    """Facade: build once, assign many (see module docstring)."""
+
+    def __init__(self, strategy: str, cfg: Optional[EngineConfig] = None, *,
+                 simple_index: Optional[SimpleIndex] = None,
+                 fast_index: Optional[FastIndex] = None,
+                 covering=None, census: Optional[CensusMap] = None):
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; "
+                             f"expected one of {STRATEGIES}")
+        self.strategy = strategy
+        self.cfg = cfg or EngineConfig()
+        self.simple_index = simple_index
+        self.fast_index = fast_index
+        self.covering = covering
+        self.census = census
+        self._sharded: dict[int, ShardedFastIndex] = {}
+        if strategy in ("simple", "hybrid") and simple_index is None:
+            raise ValueError(f"strategy {strategy!r} needs a simple_index")
+        if strategy in ("fast", "hybrid") and fast_index is None:
+            raise ValueError(f"strategy {strategy!r} needs a fast_index")
+
+    @classmethod
+    def build(cls, census: CensusMap, strategy: str = "simple",
+              cfg: Optional[EngineConfig] = None,
+              covering=None) -> "GeoEngine":
+        """Build the indices ``strategy`` needs from a host-side census."""
+        cfg = cfg or EngineConfig()
+        simple_index = fast_index = None
+        if strategy in ("simple", "hybrid"):
+            simple_index = SimpleIndex.from_census(census)
+        if strategy in ("fast", "hybrid"):
+            if covering is None:
+                covering = build_cell_covering(census,
+                                               max_level=cfg.max_level,
+                                               max_cand=cfg.max_cand)
+            fast_index = FastIndex.from_covering(covering, census,
+                                                 gbits=cfg.gbits)
+        return cls(strategy, cfg, simple_index=simple_index,
+                   fast_index=fast_index, covering=covering, census=census)
+
+    # -- single-mesh assign ------------------------------------------------
+
+    def assign(self, points: jnp.ndarray) -> AssignResult:
+        """Map [N, 2] (lon, lat) points -> AssignResult."""
+        if self.strategy == "simple":
+            sid, cid, bid, st = simple_mod.assign_simple(
+                self.simple_index, points, self.cfg.simple_cfg())
+            levels = ("state", "county", "block")
+            return AssignResult(sid, cid, bid, GeoStats(
+                n_need=sum(st[l]["n_multi"] for l in levels),
+                n_pip=sum(st[l]["n_pip"] for l in levels),
+                overflow=sum(st[l]["overflow"] for l in levels),
+                extra=st))
+        if self.strategy == "fast":
+            sid, cid, bid, st = fast_mod.assign_fast(
+                self.fast_index, points, self.cfg.fast_cfg())
+        else:
+            sid, cid, bid, st = _assign_hybrid(
+                self.fast_index, self.simple_index, points,
+                self.cfg.hybrid_cascade_cfg(), self.cfg.cap_boundary)
+        return AssignResult(sid, cid, bid, GeoStats(
+            n_need=st["n_boundary"], n_pip=st["n_pip"],
+            overflow=st["overflow"], extra=st))
+
+    # -- sharded assign ----------------------------------------------------
+
+    def _sharded_index(self, n_shards: int) -> ShardedFastIndex:
+        if n_shards not in self._sharded:
+            if self.covering is None or self.census is None:
+                raise ValueError("assign_sharded needs the engine built "
+                                 "from a census with a cell covering "
+                                 "(strategy 'fast' or 'hybrid')")
+            self._sharded[n_shards] = shard_covering(
+                self.covering, self.census, n_shards)
+        return self._sharded[n_shards]
+
+    def assign_sharded(self, points: jnp.ndarray, mesh) -> AssignResult:
+        """Sharded lookup over ``mesh``'s "model" axis (see module doc).
+
+        Capacity per shard is ``cap_shard * N / n_shards`` — routing skew
+        beyond that is dropped to bid -1 and counted in stats
+        (extra["n_dropped"]), mirroring MoE token dropping.
+        """
+        if "model" not in mesh.axis_names:
+            raise ValueError("assign_sharded expects a mesh with a "
+                             "'model' axis")
+        n = points.shape[0]
+        n_shards = int(mesh.shape["model"])
+        sidx = self._sharded_index(n_shards)
+        capacity = capacity_for(n, self.cfg.cap_shard / n_shards)
+        cap_pip = capacity_for(capacity, self.cfg.cap_boundary,
+                               ceiling=capacity)
+        sid, cid, bid, st = _sharded_assign(
+            sidx, points, mesh, self.cfg.fast_cfg(), capacity, cap_pip)
+        return AssignResult(sid, cid, bid, GeoStats(
+            n_need=st["n_boundary"], n_pip=st["n_pip"],
+            overflow=st["overflow"] + st["n_dropped"], extra=st))

@@ -25,9 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cells import CellCovering
-from repro.core.compact import compact_indices
+from repro.core.compact import capacity_for
 from repro.core.geometry import CensusMap
+from repro.core.resolve import resolve_candidates
 from repro.kernels import ops
+
+# Sentinel cell value for points outside the map (below any candidate row
+# encoding -(row+1)).
+OUTSIDE = -2**30
 
 
 def part1by1(x: jnp.ndarray) -> jnp.ndarray:
@@ -39,8 +44,22 @@ def part1by1(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def unpart1by1(x: jnp.ndarray) -> jnp.ndarray:
+    x = x & 0x55555555
+    x = (x | (x >> 1)) & 0x33333333
+    x = (x | (x >> 2)) & 0x0F0F0F0F
+    x = (x | (x >> 4)) & 0x00FF00FF
+    x = (x | (x >> 8)) & 0x0000FFFF
+    return x
+
+
 def morton(ix: jnp.ndarray, iy: jnp.ndarray) -> jnp.ndarray:
     return (part1by1(iy) << 1) | part1by1(ix)
+
+
+def demorton(code: jnp.ndarray):
+    """Inverse of ``morton``: leaf code -> (ix, iy) grid coordinates."""
+    return unpart1by1(code), unpart1by1(code >> 1)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -119,13 +138,21 @@ class FastIndex:
         )
 
 
-def leaf_codes(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
-    n = 1 << index.max_level
-    ix = jnp.clip(((points[:, 0] - index.quant[0]) * index.quant[2])
+def quantize_codes(quant: jnp.ndarray, max_level: int,
+                   points: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-point quantize + Morton-interleave [N, 2] points to leaf codes
+    given the bare quant params [4] = (x0, y0, sx, sy) — usable by any
+    index flavour (FastIndex, ShardedFastIndex)."""
+    n = 1 << max_level
+    ix = jnp.clip(((points[:, 0] - quant[0]) * quant[2])
                   .astype(jnp.int32), 0, n - 1)
-    iy = jnp.clip(((points[:, 1] - index.quant[1]) * index.quant[3])
+    iy = jnp.clip(((points[:, 1] - quant[1]) * quant[3])
                   .astype(jnp.int32), 0, n - 1)
     return morton(ix, iy)
+
+
+def leaf_codes(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
+    return quantize_codes(index.quant, index.max_level, points)
 
 
 def locate_cells(index: FastIndex, codes: jnp.ndarray) -> jnp.ndarray:
@@ -160,8 +187,22 @@ class FastConfig:
     backend: str | None = None
 
 
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
+def cell_values(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
+    """Covering-cell value per point: >= 0 interior block id ("true hit"),
+    -(row+1) boundary candidate row, OUTSIDE if the point is in no cell."""
+    codes = leaf_codes(index, points)
+    cidx = locate_cells(index, codes)
+    in_cell = ((index.cell_lo[cidx] <= codes)
+               & (codes <= index.cell_hi[cidx]))  # gap => outside the map
+    return jnp.where(in_cell, index.cell_val[cidx], OUTSIDE)
+
+
+def parents_of(index, bid: jnp.ndarray):
+    """Derive (county, state) ids from block ids via the parent tables
+    (any index flavour carrying block_parent / county_parent)."""
+    cid = jnp.where(bid >= 0, index.block_parent[jnp.clip(bid, 0, None)], -1)
+    sid = jnp.where(cid >= 0, index.county_parent[jnp.clip(cid, 0, None)], -1)
+    return cid, sid
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -169,16 +210,13 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
                 cfg: FastConfig = FastConfig()):
     """Map [N, 2] points -> (state, county, block ids, stats)."""
     n = points.shape[0]
-    codes = leaf_codes(index, points)
-    cidx = locate_cells(index, codes)
-    in_cell = ((index.cell_lo[cidx] <= codes)
-               & (codes <= index.cell_hi[cidx]))  # gap => outside the map
-    val = jnp.where(in_cell, index.cell_val[cidx], -2**30)
+    val = cell_values(index, points)
     is_boundary = val < 0
     brow = jnp.clip(-(val + 1), 0, max(index.cand.shape[0] - 1, 0))
     bid = jnp.where(val >= 0, val, -1)
+    need = is_boundary & (val > OUTSIDE)
 
-    n_boundary = jnp.sum((is_boundary & (val > -2**30)).astype(jnp.int32))
+    n_boundary = jnp.sum(need.astype(jnp.int32))
     n_pip = jnp.zeros((), jnp.int32)
     overflow = jnp.zeros((), jnp.int32)
 
@@ -187,54 +225,22 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
             # Centre-owner candidate; error <= leaf cell diagonal.  Gather
             # only slot 0 ([N] i32) instead of the full [N, K] table.
             cand0 = index.cand[brow, 0]
-            bid = jnp.where(is_boundary & (val > -2**30), cand0, bid)
+            bid = jnp.where(need, cand0, bid)
         else:
-            cands = index.cand[brow]                 # [N, K]
-            need = is_boundary & (val > -2**30)
-            cap = min(_round_up(max(int(n * cfg.cap_boundary), 256), 256), n)
-            idx, slot_ok = compact_indices(need, cap)   # O(N), not argsort
-            sub_pts = points[idx]
-            sub_need = need[idx] & slot_ok
-            sub_cands = cands[idx]
             # Two-phase resolution (§Perf geo iterations 2-3): the centre-
-            # owner candidate (slot 0) resolves ~90 % of boundary points, so
-            # phase 1 tests ONLY slot 0 for all points; phase 2 batches the
-            # remaining K-1 candidates for the ~10 % of misses in one
-            # expanded kernel call (vs K sequential calls originally).
-            kk = index.cand.shape[1]
-            pid0 = sub_cands[:, 0]
-            edges0 = index.block_edges[jnp.clip(pid0, 0, None)]
-            in0 = ops.pip_gathered(sub_pts, edges0, backend=cfg.backend)
-            in0 = in0 & (pid0 >= 0) & sub_need
-            n_pip = jnp.sum(sub_need.astype(jnp.int32))
+            # owner candidate (slot 0) resolves ~90 % of boundary points,
+            # so phase 1 tests ONLY slot 0 for the whole buffer; phase 2
+            # batches the remaining K-1 candidates for the ~10 % of misses.
+            # Unmatched boundary points fall back to the centre owner
+            # (fallback="first").
+            bid, rs = resolve_candidates(
+                points, lambda idx, _: index.cand[brow[idx]],
+                index.block_edges, need,
+                cap=capacity_for(n, cfg.cap_boundary),
+                backend=cfg.backend, prior=bid, fallback="first",
+                two_phase=True)
+            n_pip, overflow = rs.n_pip, rs.overflow
 
-            miss = sub_need & ~in0
-            cap2 = min(_round_up(max(cap // 4, 256), 256), cap)
-            idx2, ok2 = compact_indices(miss, cap2)
-            rest = sub_cands[idx2, 1:]                        # [R2, K-1]
-            flat_pid = rest.reshape(-1)
-            pts_rep = jnp.repeat(sub_pts[idx2], kk - 1, axis=0)
-            edges = index.block_edges[jnp.clip(flat_pid, 0, None)]
-            in_r = ops.pip_gathered(pts_rep, edges, backend=cfg.backend)
-            in_r = (in_r & (flat_pid >= 0)).reshape(-1, kk - 1)
-            n_pip = n_pip + jnp.sum((miss[idx2][:, None]
-                                     & (rest >= 0)).astype(jnp.int32))
-            score = jnp.where(in_r, kk - jnp.arange(1, kk)[None, :], 0)
-            best = jnp.argmax(score, axis=1)
-            hit2 = jnp.any(in_r, axis=1) & miss[idx2] & ok2
-            val2 = jnp.take_along_axis(rest, best[:, None], axis=1)[:, 0]
-            assign = jnp.where(in0, pid0, -1)
-            assign = assign.at[idx2].set(
-                jnp.where(hit2, val2, assign[idx2]))
-            # Unmatched boundary points fall back to the centre owner.
-            fallback = jnp.where(sub_cands[:, 0] >= 0, sub_cands[:, 0], -1)
-            new_bid = jnp.where(sub_need,
-                                jnp.where(assign >= 0, assign, fallback),
-                                bid[idx])
-            bid = bid.at[idx].set(new_bid)
-            overflow = n_boundary - jnp.sum(sub_need.astype(jnp.int32))
-
-    cid = jnp.where(bid >= 0, index.block_parent[jnp.clip(bid, 0, None)], -1)
-    sid = jnp.where(cid >= 0, index.county_parent[jnp.clip(cid, 0, None)], -1)
+    cid, sid = parents_of(index, bid)
     stats = {"n_boundary": n_boundary, "n_pip": n_pip, "overflow": overflow}
     return sid, cid, bid, stats

@@ -1,0 +1,250 @@
+"""Shared resolution core for every mapping strategy (DESIGN.md §3).
+
+Each strategy in this repo — the simple cascade (paper §III), the fast
+cell index (paper §IV), the engine's hybrid mode, and the Morton-sharded
+distributed lookup — bottoms out in the same compute pattern:
+
+    candidate filter -> fixed-capacity compaction -> crossing-number PIP
+    against <= K candidate polygons -> fallback policy -> overflow-counted
+    stats.
+
+``resolve_candidates`` implements that pattern exactly once.  Strategy
+modules stay thin drivers: they decide *which* points need resolution and
+*which* candidates each point brings, then hand both to this primitive.
+
+Two PIP schedules are provided (they return identical assignments — the
+first matching candidate in slot order — and differ only in kernel-call
+shape):
+
+  * sequential  — K kernel calls over the full compacted buffer; right when
+    K is small and the buffer large (the cascade levels).
+  * two_phase   — slot 0 (the centre-owner / best candidate) for the whole
+    buffer, then one batched call over the remaining K-1 candidates for the
+    ~10 % of slot-0 misses (§Perf geo iterations 2-3).  Right when slot 0
+    resolves most points (the boundary-cell fallback).
+
+Backend strings are resolved here, once, via ``ops.resolve_backend`` —
+callers pass the raw ``cfg.backend`` through and never touch kernel
+dispatch themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compact import capacity_for, compact_indices, scatter_filled
+from repro.kernels import ops
+
+# Candidate table for N points: either a precomputed [N, K] id array or a
+# callable evaluated *after* compaction — (idx [R], sub_pts [R, 2]) ->
+# [R, K] — so strategies can defer expensive candidate gathering to the
+# (much smaller) compacted buffer.
+CandidateFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+Candidates = Union[jnp.ndarray, CandidateFn]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ResolveStats:
+    """Per-resolve accounting (device scalars, all i32).
+
+    n_need:   points that required candidate resolution.
+    n_pip:    candidate PIP tests actually issued.
+    overflow: points dropped by the fixed-capacity compaction — counted,
+              never silent (callers re-run stragglers or size caps up).
+    """
+
+    n_need: Any
+    n_pip: Any
+    overflow: Any
+
+    def tree_flatten(self):
+        return (self.n_need, self.n_pip, self.overflow), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def as_dict(self) -> dict:
+        return {"n_need": self.n_need, "n_pip": self.n_pip,
+                "overflow": self.overflow}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GeoStats:
+    """Unified cross-strategy stats: the three core counters plus the
+    strategy's native breakdown under ``extra`` (e.g. per-level dicts for
+    the cascade, ``n_boundary`` for the cell index)."""
+
+    n_need: Any
+    n_pip: Any
+    overflow: Any
+    extra: Any = dataclasses.field(default_factory=dict)
+
+    def tree_flatten(self):
+        return (self.n_need, self.n_pip, self.overflow, self.extra), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AssignResult:
+    """(state, county, block) ids plus GeoStats; iterable for tuple-style
+    unpacking parity with the legacy ``assign_*`` returns."""
+
+    state: Any
+    county: Any
+    block: Any
+    stats: Any
+
+    def __iter__(self):
+        return iter((self.state, self.county, self.block, self.stats))
+
+    def tree_flatten(self):
+        return (self.state, self.county, self.block, self.stats), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Slots of the first min(k, C) set bits per row of a [R, C] mask
+    (else -1); k is clamped so narrow candidate tables (tiny maps) work."""
+    c = mask.shape[1]
+    k = min(k, c)
+    iota = jnp.arange(c, dtype=jnp.int32)[None, :]
+    score = jnp.where(mask != 0, c - iota, 0)       # larger = earlier slot
+    vals, _ = jax.lax.top_k(score, k)
+    return jnp.where(vals > 0, c - vals, -1)        # [R, k] slot indices
+
+
+def _pip_sequential(points, cand_ids, edges_table, need, backend):
+    """First matching candidate in slot order, K sequential kernel calls.
+
+    Returns (assign [R] i32 with -1 = no candidate matched, n_pip [] i32).
+    """
+    k = cand_ids.shape[1]
+    assign = jnp.full(points.shape[0], -1, jnp.int32)
+    n_pip = jnp.zeros((), jnp.int32)
+    for kk in range(k):
+        pid = cand_ids[:, kk]
+        active = need & (pid >= 0) & (assign < 0)
+        edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
+        inside = ops.pip_gathered(points, edges, backend=backend)
+        assign = jnp.where(active & inside, pid, assign)
+        n_pip = n_pip + jnp.sum(active.astype(jnp.int32))
+    return assign, n_pip
+
+
+def _pip_two_phase(points, cand_ids, edges_table, need, backend, cap2):
+    """Same assignment as ``_pip_sequential`` in two batched phases:
+    slot 0 for everyone, then the remaining K-1 slots for the ``cap2``
+    compacted slot-0 misses.  Misses beyond cap2 degrade to the caller's
+    fallback policy (they are not counted as overflow — same contract as
+    capacity overflow, the answer is the fallback, not a drop)."""
+    kk = cand_ids.shape[1]
+    pid0 = cand_ids[:, 0]
+    edges0 = edges_table[jnp.clip(pid0, 0, edges_table.shape[0] - 1)]
+    in0 = ops.pip_gathered(points, edges0, backend=backend)
+    in0 = in0 & (pid0 >= 0) & need
+    n_pip = jnp.sum(need.astype(jnp.int32))
+    assign = jnp.where(in0, pid0, -1)
+    if kk == 1:
+        return assign, n_pip
+
+    miss = need & ~in0
+    idx2, ok2 = compact_indices(miss, cap2)
+    rest = cand_ids[idx2, 1:]                        # [R2, K-1]
+    flat_pid = rest.reshape(-1)
+    pts_rep = jnp.repeat(points[idx2], kk - 1, axis=0)
+    edges = edges_table[jnp.clip(flat_pid, 0, edges_table.shape[0] - 1)]
+    in_r = ops.pip_gathered(pts_rep, edges, backend=backend)
+    in_r = (in_r & (flat_pid >= 0)).reshape(-1, kk - 1)
+    n_pip = n_pip + jnp.sum((miss[idx2][:, None]
+                             & (rest >= 0)).astype(jnp.int32))
+    score = jnp.where(in_r, kk - jnp.arange(1, kk)[None, :], 0)
+    best = jnp.argmax(score, axis=1)
+    hit2 = jnp.any(in_r, axis=1) & miss[idx2] & ok2
+    val2 = jnp.take_along_axis(rest, best[:, None], axis=1)[:, 0]
+    assign = scatter_filled(assign, idx2, ok2,
+                            jnp.where(hit2, val2, assign[idx2]))
+    return assign, n_pip
+
+
+def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
+                       edges_table: jnp.ndarray, need: jnp.ndarray, *,
+                       cap: int, k: int | None = None,
+                       backend: str | None = None,
+                       prior: jnp.ndarray | None = None,
+                       fallback: str = "prior",
+                       two_phase: bool = False,
+                       cap2: int | None = None):
+    """THE compaction + candidate-PIP + fallback primitive.
+
+    Args:
+      points:      [N, 2] query points (full batch).
+      cand_ids:    [N, K] candidate polygon ids (-1 = empty slot), or a
+                   callable gathering them post-compaction (see Candidates).
+      edges_table: [P, E, 4] edge table the candidate ids index into.
+      need:        [N] bool — points requiring resolution.
+      cap:         static compaction capacity (see compact.capacity_for).
+      k:           optional truncation of the candidate list to its first k
+                   slots.
+      backend:     kernel backend override (resolved once, here).
+      prior:       [N] i32 assignment so far; rows outside ``need`` (and
+                   rows whose resolution fails, under fallback="prior")
+                   keep it.  Defaults to all -1.
+      fallback:    what a needed-but-unmatched point gets:
+                     "prior" — its prior value (cascade: the bbox select);
+                     "first" — its slot-0 candidate (cell index: the
+                     centre owner, error bounded by the leaf diagonal).
+      two_phase:   PIP schedule (see module docstring).
+      cap2:        two-phase only — capacity of the phase-2 (slot-0 miss)
+                   compaction; defaults to a quarter of ``cap`` (the
+                   centre-owner hit rate makes misses the minority).
+
+    Returns:
+      (assign [N] i32, ResolveStats).  Capacity overflow leaves ``prior``
+      untouched and is counted in stats.overflow.
+    """
+    n = points.shape[0]
+    backend = ops.resolve_backend(backend)
+    if prior is None:
+        prior = jnp.full((n,), -1, jnp.int32)
+    idx, slot_ok = compact_indices(need, cap)
+    sub_pts = points[idx]
+    sub_need = need[idx] & slot_ok
+    sub_cand = cand_ids(idx, sub_pts) if callable(cand_ids) \
+        else cand_ids[idx]
+    if k is not None:
+        sub_cand = sub_cand[:, :k]
+    if two_phase:
+        if cap2 is None:
+            cap2 = capacity_for(cap, 0.25, ceiling=cap)
+        resolved, n_pip = _pip_two_phase(sub_pts, sub_cand, edges_table,
+                                         sub_need, backend, cap2)
+    else:
+        resolved, n_pip = _pip_sequential(sub_pts, sub_cand, edges_table,
+                                          sub_need, backend)
+    if fallback == "first":
+        fb = jnp.where(sub_cand[:, 0] >= 0, sub_cand[:, 0], -1)
+    elif fallback == "prior":
+        fb = prior[idx]
+    else:
+        raise ValueError(f"unknown fallback policy: {fallback!r}")
+    new_val = jnp.where(sub_need,
+                        jnp.where(resolved >= 0, resolved, fb),
+                        prior[idx])
+    assign = scatter_filled(prior, idx, slot_ok, new_val)
+    n_need = jnp.sum(need.astype(jnp.int32))
+    overflow = n_need - jnp.sum(sub_need.astype(jnp.int32))
+    return assign, ResolveStats(n_need=n_need, n_pip=n_pip,
+                                overflow=overflow)

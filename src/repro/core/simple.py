@@ -9,10 +9,12 @@ crossing-number kernel against at most ``k_cand`` candidate polygons.
 TPU adaptation vs the Matlab/GraphBLAS original (see DESIGN.md §2):
   * sparse bbox outer products  -> dense Pallas tiles (`kernels/bbox.py`);
   * per-state `find()` loops    -> fixed-capacity compaction: unresolved
-    points are argsort-compacted into a static-shape buffer, resolved with
-    the gathered-PIP kernel, and scattered back.  Capacity overflow is
-    *counted and reported* (stats.overflow) rather than silently dropped —
-    callers either size capacities generously or re-run stragglers on host.
+    points are compacted into a static-shape buffer (O(N) cumsum;
+    core/compact.py), resolved with the gathered-PIP kernel, and scattered
+    back — all via the shared resolution core in core/resolve.py.  Capacity
+    overflow is *counted and reported* (stats.overflow) rather than
+    silently dropped — callers either size capacities generously or re-run
+    stragglers on host.
   * everything is a single jit-able function of device arrays -> it fuses
     into data pipelines and shards over ("pod","data") by construction.
 """
@@ -26,13 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compact import compact_indices
+from repro.core.compact import capacity_for
 from repro.core.geometry import CensusMap, children_tables
-from repro.kernels import ops, ref
-
-
-def _round_up(n: int, m: int) -> int:
-    return ((n + m - 1) // m) * m
+from repro.core.resolve import first_k_candidates, resolve_candidates
+from repro.kernels import ops
 
 
 @jax.tree_util.register_pytree_node_class
@@ -104,56 +103,21 @@ class SimpleConfig:
     backend: str | None = None  # kernel backend override
 
 
-def _first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Slots of the first k set bits per row of a [R, C] mask (else -1)."""
-    c = mask.shape[1]
-    iota = jnp.arange(c, dtype=jnp.int32)[None, :]
-    score = jnp.where(mask != 0, c - iota, 0)       # larger = earlier slot
-    vals, _ = jax.lax.top_k(score, k)
-    return jnp.where(vals > 0, c - vals, -1)        # [R, k] slot indices
-
-
-def _compact_indices(unresolved: jnp.ndarray, cap: int):
-    """Indices of unresolved points, compacted to a static-size buffer
-    (O(N) cumsum compaction; see core/compact.py).  Returns (idx, valid)."""
-    return compact_indices(unresolved, cap)
-
-
-def _resolve_level(points, idx, cand_ids, edges_table, unresolved, backend):
-    """PIP-resolve compacted points against their candidate polygon ids.
-
-    Args:
-      points:      [R, 2] compacted points.
-      idx:         [R] original indices (for stats only; unused here).
-      cand_ids:    [R, K] candidate polygon ids (-1 = none).
-      edges_table: [P, E, 4] level edge table.
-      unresolved:  [R] bool — rows actually needing resolution.
-    Returns:
-      assign [R] i32 (-1 if nothing matched), n_pip_tests [] i32.
-    """
-    k = cand_ids.shape[1]
-    assign = jnp.full(points.shape[0], -1, jnp.int32)
-    n_tests = jnp.zeros((), jnp.int32)
-    for kk in range(k):
-        pid = cand_ids[:, kk]
-        active = unresolved & (pid >= 0) & (assign < 0)
-        edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
-        inside = ops.pip_gathered(points, edges, backend=backend)
-        assign = jnp.where(active & inside, pid, assign)
-        n_tests = n_tests + jnp.sum(active.astype(jnp.int32))
-    return assign, n_tests
+def _level_stats(rs) -> dict:
+    """Legacy per-level stats dict from a ResolveStats."""
+    return {"n_multi": rs.n_need, "n_pip": rs.n_pip, "overflow": rs.overflow}
 
 
 def _level_pass(points, parent, children_table, bbox_table, edges_table,
                 cap: int, k_cand: int, backend):
-    """One hierarchy level: bbox count/select then PIP fallback.
+    """One hierarchy level: bbox count/select, then the shared resolution
+    core for points in more than one child bbox.
 
     Args:
       points: [N, 2]; parent: [N] i32 id into the *parent* level (-1 = lost).
     Returns:
       (assign [N] i32 child ids, stats dict)
     """
-    n = points.shape[0]
     n_parents = children_table.shape[0] - 1
     parent_ix = jnp.where(parent >= 0, parent, n_parents)      # sentinel row
     cand = children_table[parent_ix]                            # [N, C]
@@ -165,29 +129,28 @@ def _level_pass(points, parent, children_table, bbox_table, edges_table,
                                            axis=1)[:, 0],
                        -1)
     unresolved = cnt > 1
-    # --- fixed-capacity compaction + PIP fallback ---
-    idx, slot_ok = _compact_indices(unresolved, cap)
-    sub_pts = points[idx]
-    sub_unres = unresolved[idx] & slot_ok
-    sub_mask = ref.bbox_mask_gathered(sub_pts, boxes[idx])      # [R, C] i8
-    cand_slots = _first_k_candidates(sub_mask, k_cand)          # [R, K]
-    sub_cand = jnp.take_along_axis(cand[idx], cand_slots.clip(0), axis=1)
-    sub_cand = jnp.where(cand_slots >= 0, sub_cand, -1)
-    resolved, n_pip = _resolve_level(sub_pts, idx, sub_cand, edges_table,
-                                     sub_unres, backend)
-    # Points whose PIP found nothing keep the bbox select (boundary grazing).
-    new_val = jnp.where(sub_unres,
-                        jnp.where(resolved >= 0, resolved, assign[idx]),
-                        assign[idx])
-    assign = assign.at[idx].set(new_val)
-    overflow = jnp.sum(unresolved.astype(jnp.int32)) - \
-        jnp.sum(sub_unres.astype(jnp.int32))
-    stats = {"n_multi": jnp.sum(unresolved.astype(jnp.int32)),
-             "n_pip": n_pip, "overflow": overflow}
-    return assign, stats
+
+    def cand_fn(idx, sub_pts):
+        # Candidate gathering deferred to the compacted buffer: recompute
+        # the per-box mask only for the rows that actually need PIP.
+        sub_mask = ops.bbox_mask_gathered(sub_pts, boxes[idx],
+                                          backend=backend)      # [R, C] i8
+        slots = first_k_candidates(sub_mask, k_cand)            # [R, K]
+        sub_cand = jnp.take_along_axis(cand[idx], slots.clip(0), axis=1)
+        return jnp.where(slots >= 0, sub_cand, -1)
+
+    # Points whose PIP finds nothing keep the bbox select (fallback="prior"
+    # — boundary grazing).
+    assign, rs = resolve_candidates(points, cand_fn, edges_table,
+                                    unresolved, cap=cap, backend=backend,
+                                    prior=assign, fallback="prior")
+    return assign, _level_stats(rs)
 
 
-def _assign_impl(index: SimpleIndex, points: jnp.ndarray, cfg: SimpleConfig):
+def cascade_assign(index: SimpleIndex, points: jnp.ndarray,
+                   cfg: SimpleConfig):
+    """The three-level cascade as a plain traceable function (no jit) so
+    other strategies — notably the engine's hybrid mode — can embed it."""
     n = points.shape[0]
     backend = cfg.backend
 
@@ -198,35 +161,28 @@ def _assign_impl(index: SimpleIndex, points: jnp.ndarray, cfg: SimpleConfig):
     iota = jnp.arange(ns, dtype=jnp.int32)[None, :]
     sid = jnp.max(jnp.where(mask != 0, iota, -1), axis=1)
     unresolved = cnt > 1
-    cap1 = min(_round_up(max(int(n * cfg.cap_state), 256), 256), n)
-    idx, slot_ok = _compact_indices(unresolved, cap1)
-    sub_unres = unresolved[idx] & slot_ok
-    cand_slots = _first_k_candidates(mask[idx], cfg.k_cand)
-    resolved, n_pip1 = _resolve_level(points[idx], idx, cand_slots,
-                                      index.state_edges, sub_unres,
-                                      backend)
-    new_sid = jnp.where(sub_unres,
-                        jnp.where(resolved >= 0, resolved, sid[idx]),
-                        sid[idx])
-    sid = sid.at[idx].set(new_sid)
-    s_stats = {"n_multi": jnp.sum(unresolved.astype(jnp.int32)),
-               "n_pip": n_pip1,
-               "overflow": jnp.sum(unresolved.astype(jnp.int32))
-               - jnp.sum(sub_unres.astype(jnp.int32))}
+    # State candidates ARE bbox slots, so candidate selection is just
+    # first_k over the flat mask rows.
+    sid, rs1 = resolve_candidates(
+        points, lambda idx, _: first_k_candidates(mask[idx], cfg.k_cand),
+        index.state_edges, unresolved,
+        cap=capacity_for(n, cfg.cap_state), backend=backend,
+        prior=sid, fallback="prior")
 
     # --- Stage 2: counties of the point's state ---
-    cap2 = min(_round_up(max(int(n * cfg.cap_county), 256), 256), n)
     cid, c_stats = _level_pass(points, sid, index.county_children,
                                index.county_bbox, index.county_edges,
-                               cap2, cfg.k_cand, backend)
+                               capacity_for(n, cfg.cap_county),
+                               cfg.k_cand, backend)
 
     # --- Stage 3: blocks of the point's county ---
-    cap3 = min(_round_up(max(int(n * cfg.cap_block), 256), 256), n)
     bid, b_stats = _level_pass(points, cid, index.block_children,
                                index.block_bbox, index.block_edges,
-                               cap3, cfg.k_cand, backend)
+                               capacity_for(n, cfg.cap_block),
+                               cfg.k_cand, backend)
 
-    stats = {"state": s_stats, "county": c_stats, "block": b_stats}
+    stats = {"state": _level_stats(rs1), "county": c_stats,
+             "block": b_stats}
     return sid, cid, bid, stats
 
 
@@ -234,4 +190,4 @@ def _assign_impl(index: SimpleIndex, points: jnp.ndarray, cfg: SimpleConfig):
 def assign_simple(index: SimpleIndex, points: jnp.ndarray,
                   cfg: SimpleConfig = SimpleConfig()):
     """Map [N, 2] (lon, lat) points to (state, county, block) ids + stats."""
-    return _assign_impl(index, points, cfg)
+    return cascade_assign(index, points, cfg)

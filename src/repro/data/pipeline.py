@@ -9,18 +9,16 @@ Two sources:
   * SyntheticLM  — reproducible token streams (zipf-ish unigram mixture with
     a per-sequence "topic" so the loss is learnable, not pure noise).
   * GeoEnriched  — wraps another source and joins each record's (lon, lat)
-    onto census blocks with the paper's fast index, appending the block id
-    as a feature token — the paper's technique as a first-class pipeline
-    stage (core/enrich.py).
+    onto census blocks through a GeoEngine (core/engine.py), appending the
+    block id as a feature token — the paper's technique as a first-class
+    pipeline stage (core/enrich.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -63,29 +61,62 @@ class SyntheticLM:
 @dataclasses.dataclass
 class GeoEnriched:
     """Wraps a source; each sequence carries a (lon, lat) and its census
-    block id (via the paper's fast index) is prepended as a feature token
-    ``vocab_geo_base + (block_id % n_geo_tokens)``."""
+    block id is prepended as a feature token
+    ``vocab_geo_base + (block_id % n_geo_tokens)``.
+
+    The mapping runs through a ``core.engine.GeoEngine`` with a cell index
+    (strategy "fast" or "hybrid" — point sampling draws from the covering
+    cells, so a simple-only engine is rejected); the legacy
+    ``fast_index``/``fast_cfg`` pair is still accepted and wrapped into a
+    fast-strategy engine on first use.
+    """
 
     source: SyntheticLM
-    fast_index: object               # core.fast.FastIndex
-    fast_cfg: object                 # core.fast.FastConfig
+    engine: object = None            # core.engine.GeoEngine
+    fast_index: object = None        # legacy: core.fast.FastIndex
+    fast_cfg: object = None          # legacy: core.fast.FastConfig
     points_seed: int = 7
     n_geo_tokens: int = 1024
 
+    def _engine(self):
+        if self.engine is None:
+            from repro.core.engine import EngineConfig, GeoEngine
+            fcfg = self.fast_cfg
+            cfg = EngineConfig() if fcfg is None else EngineConfig(
+                mode=fcfg.mode, cap_boundary=fcfg.cap_boundary,
+                backend=fcfg.backend)
+            self.engine = GeoEngine("fast", cfg, fast_index=self.fast_index)
+        if self.engine.fast_index is None:
+            raise ValueError("GeoEnriched needs an engine with a cell "
+                             "index (strategy 'fast' or 'hybrid'); got "
+                             f"strategy {self.engine.strategy!r}")
+        return self.engine
+
+    def _sample_points(self, key, batch: int) -> jnp.ndarray:
+        """Device-side (lon, lat) samples guaranteed to land on the map:
+        pick a covering cell uniformly, then a point inside its first leaf
+        cell (a covering cell always contains its own leaf cells, so no
+        sample falls into an off-map gap the way extent-uniform sampling
+        did)."""
+        index = self._engine().fast_index
+        kc, ku = jax.random.split(key)
+        r = jax.random.randint(kc, (batch,), 0, index.cell_lo.shape[0])
+        from repro.core.fast import demorton
+        ix, iy = demorton(index.cell_lo[r])
+        # Keep the intra-cell jitter off the leaf borders so fp32
+        # re-quantization in leaf_codes can't push a sample into a
+        # neighbouring (possibly off-map) cell.
+        u = 0.05 + 0.9 * jax.random.uniform(ku, (batch, 2))
+        q = index.quant
+        return jnp.stack([q[0] + (ix + u[:, 0]) / q[2],
+                          q[1] + (iy + u[:, 1]) / q[3]], axis=-1)
+
     def batch_at(self, step: int) -> dict:
-        from repro.core.fast import assign_fast
         out = dict(self.source.batch_at(step))
         b = out["tokens"].shape[0]
         k = jax.random.fold_in(jax.random.key(self.points_seed), step)
-        x0, x1, y0, y1 = [float(v) for v in np.asarray(
-            self.fast_index.quant)[:2]] + [0.0, 0.0]
-        # Sample device-side points uniformly in the map extent.
-        q = self.fast_index.quant
-        n = 1 << self.fast_index.max_level
-        u = jax.random.uniform(k, (b, 2))
-        xy = jnp.stack([q[0] + u[:, 0] * (n / q[2]),
-                        q[1] + u[:, 1] * (n / q[3])], axis=-1)
-        _, _, bid, _ = assign_fast(self.fast_index, xy, self.fast_cfg)
+        xy = self._sample_points(k, b)
+        bid = self._engine().assign(xy).block
         geo_tok = (jnp.maximum(bid, 0) % self.n_geo_tokens).astype(jnp.int32)
         tokens = out["tokens"].at[:, 0].set(
             geo_tok % self.source.cfg.vocab)
@@ -95,10 +126,13 @@ class GeoEnriched:
 
 
 def make_source(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0,
-                geo: Optional[tuple] = None):
+                geo=None):
+    """``geo`` is a GeoEngine, or the legacy (FastIndex, FastConfig) pair."""
     src = SyntheticLM(cfg=cfg, batch=shape.global_batch, seq=shape.seq_len,
                       seed=seed)
-    if geo is not None:
+    if geo is None:
+        return src
+    if isinstance(geo, tuple):
         index, fcfg = geo
         return GeoEnriched(source=src, fast_index=index, fast_cfg=fcfg)
-    return src
+    return GeoEnriched(source=src, engine=geo)

@@ -95,6 +95,19 @@ def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray,
     return out[:n, :m]
 
 
+def bbox_mask_gathered(points: jnp.ndarray, boxes: jnp.ndarray,
+                       backend: str | None = None) -> jnp.ndarray:
+    """[N, C] int8 membership in per-point gathered boxes [N, C, 4].
+
+    All backends lower to the jnp reference: the comparison work is
+    bandwidth-bound gather output XLA fuses into its consumers, so a Pallas
+    kernel buys nothing here.  The signature still takes ``backend`` so
+    callers route every geometry op through this module uniformly.
+    """
+    resolve_backend(backend)   # validate the override even though unused
+    return ref.bbox_mask_gathered(points, boxes)
+
+
 def bbox_count_select(points: jnp.ndarray, boxes: jnp.ndarray,
                       backend: str | None = None):
     """Fused count+select over per-point gathered boxes [N, C, 4].

@@ -1,24 +1,53 @@
-"""Production mesh builders.
+"""Production mesh builders + jax version-compat shims.
 
 ``make_production_mesh`` is a FUNCTION (never a module-level constant) so
 importing this module never touches jax device state — required for the
 dry-run's XLA_FLAGS ordering (see launch/dryrun.py).
+
+The compat shims (``make_mesh``, ``shard_map``, ``use_mesh``) paper over
+the jax.sharding API churn between 0.4.x and 0.5+: AxisType / jax.set_mesh
+/ jax.shard_map only exist on newer versions, and the geo engine's sharded
+assign must run on both.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                        # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                         # pragma: no cover - older jax
+    AxisType = None
+
+try:                                        # jax >= 0.5
+    shard_map = jax.shard_map
+except AttributeError:                      # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh on new jax, the
+    Mesh object's own context manager — which sets the resource env — on
+    old)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e: 16x16 = 256 chips per pod; 2 pods for the multi-pod mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for multi-device unit tests (fake CPU devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

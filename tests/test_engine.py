@@ -1,0 +1,108 @@
+"""GeoEngine facade: strategy agreement (simple == fast(exact) == hybrid),
+hybrid accuracy ordering, and the dispatch-routed sharded assign.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fast as fast_mod
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.launch.mesh import make_test_mesh
+
+EXACT_CFG = EngineConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                         cap_block=1.0, cap_boundary=1.0, max_level=8)
+
+
+@pytest.fixture(scope="module")
+def engines(synth_small):
+    census = synth_small.census
+    simple = GeoEngine.build(census, "simple", EXACT_CFG)
+    fast = GeoEngine.build(census, "fast", EXACT_CFG)
+    # Reuse fast's covering so the hybrid build skips the host BFS.
+    hybrid = GeoEngine.build(census, "hybrid", EXACT_CFG,
+                             covering=fast.covering)
+    return {"simple": simple, "fast": fast, "hybrid": hybrid}
+
+
+def test_three_way_agreement_on_interior_points(engines, points_small):
+    """simple == fast(exact) == hybrid on every non-boundary (true-hit)
+    point; all three == ground truth there too."""
+    xy, bid, *_ = points_small
+    pts = jnp.asarray(xy)
+    out = {name: np.asarray(eng.assign(pts).block)
+           for name, eng in engines.items()}
+    val = np.asarray(fast_mod.cell_values(engines["fast"].fast_index, pts))
+    interior = val >= 0
+    assert interior.mean() > 0.5          # the paper's true-hit majority
+    np.testing.assert_array_equal(out["simple"][interior],
+                                  out["fast"][interior])
+    np.testing.assert_array_equal(out["fast"][interior],
+                                  out["hybrid"][interior])
+    np.testing.assert_array_equal(out["hybrid"][interior], bid[interior])
+
+
+def test_hybrid_matches_fast_exact_everywhere_on_synth(engines,
+                                                       points_small):
+    """On the synthetic map generous caps make both hybrid and fast(exact)
+    fully exact, so they agree on boundary points as well."""
+    xy, bid, *_ = points_small
+    pts = jnp.asarray(xy)
+    f = engines["fast"].assign(pts)
+    h = engines["hybrid"].assign(pts)
+    np.testing.assert_array_equal(np.asarray(f.block), bid)
+    np.testing.assert_array_equal(np.asarray(h.block), bid)
+    np.testing.assert_array_equal(np.asarray(h.state), np.asarray(f.state))
+    np.testing.assert_array_equal(np.asarray(h.county),
+                                  np.asarray(f.county))
+
+
+def test_hybrid_beats_approx_accuracy(engines, synth_small, points_small):
+    xy, bid, *_ = points_small
+    pts = jnp.asarray(xy)
+    approx = GeoEngine.build(
+        synth_small.census, "fast",
+        EngineConfig(backend="ref", mode="approx", max_level=8),
+        covering=engines["fast"].covering)
+    acc_a = (np.asarray(approx.assign(pts).block) == bid).mean()
+    acc_h = (np.asarray(engines["hybrid"].assign(pts).block) == bid).mean()
+    assert acc_h >= acc_a
+
+
+def test_assign_result_unpacks_like_legacy_tuple(engines, points_small):
+    xy, *_ = points_small
+    res = engines["simple"].assign(jnp.asarray(xy))
+    s, c, b, stats = res
+    assert np.asarray(s).shape == (len(xy),)
+    assert int(stats.overflow) == 0
+    assert int(stats.n_pip) > 0
+    assert set(stats.extra) == {"state", "county", "block"}
+
+
+def test_assign_sharded_matches_fast_exact(engines, points_small):
+    """Dispatch-routed sharded lookup == single-mesh exact lookup (1-device
+    mesh; conftest pins the process to one device)."""
+    xy, bid, *_ = points_small
+    pts = jnp.asarray(xy)
+    mesh = make_test_mesh((1, 1))
+    res = engines["fast"].assign_sharded(pts, mesh)
+    np.testing.assert_array_equal(np.asarray(res.block), bid)
+    assert int(res.stats.extra["n_dropped"]) == 0
+    f = engines["fast"].assign(pts)
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  np.asarray(f.state))
+
+
+def test_engine_validation():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        GeoEngine("warp", EngineConfig())
+    with pytest.raises(ValueError, match="needs a simple_index"):
+        GeoEngine("simple", EngineConfig())
+    with pytest.raises(ValueError, match="needs a fast_index"):
+        GeoEngine("fast", EngineConfig())
+
+
+def test_assign_sharded_requires_model_axis(engines, points_small):
+    xy, *_ = points_small
+    mesh = make_test_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="model"):
+        engines["fast"].assign_sharded(jnp.asarray(xy), mesh)

@@ -2,11 +2,12 @@
 sweeping shapes and dtypes, plus fp64 host-oracle ground truth and
 hypothesis property tests on the crossing-number geometry.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core.geometry import point_in_polygon_host
 from repro.kernels import ops, ref

@@ -2,12 +2,13 @@
 grouping, SWA masks, MLA decode-vs-train agreement, chunked SSM/mLSTM vs
 recurrent references, MoE dispatch properties.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.models import ssm, xlstm

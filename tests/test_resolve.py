@@ -1,0 +1,162 @@
+"""Unit tests for the shared resolution core (core/resolve.py): overflow
+accounting, sentinel candidates, PIP-schedule equivalence, and parity with
+the fp64 host oracle.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.geometry import point_in_polygon_host
+from repro.core.resolve import (ResolveStats, first_k_candidates,
+                                resolve_candidates)
+from repro.kernels import ops
+
+
+def star_polygon(rng, n_verts, cx=0.0, cy=0.0, r0=0.5, r1=1.5):
+    th = np.sort(rng.uniform(0, 2 * np.pi, n_verts))
+    th += np.arange(n_verts) * 1e-9
+    r = rng.uniform(r0, r1, n_verts)
+    return np.stack([cx + r * np.cos(th), cy + r * np.sin(th)], -1)
+
+
+@pytest.fixture(scope="module")
+def poly_world():
+    """Four star polygons on a 2x2 grid + points + the [P, E, 4] table."""
+    rng = np.random.default_rng(0)
+    centers = [(-2.0, -2.0), (2.0, -2.0), (-2.0, 2.0), (2.0, 2.0)]
+    rings = [star_polygon(rng, 24, cx, cy) for cx, cy in centers]
+    e = max(len(r) for r in rings)
+    edges = np.zeros((len(rings), e, 4), np.float32)
+    for p, ring in enumerate(rings):
+        nxt = np.roll(ring, -1, axis=0)
+        edges[p, :len(ring)] = np.concatenate([ring, nxt], -1)
+        edges[p, len(ring):] = np.concatenate([ring[:1], ring[:1]], -1)
+    pts = rng.uniform(-4.0, 4.0, (512, 2)).astype(np.float32)
+    return rings, jnp.asarray(edges), pts
+
+
+def oracle_first_match(rings, pts, cand_ids):
+    """First candidate (slot order) containing each point, per fp64 host
+    oracle; -1 if none."""
+    out = np.full(len(pts), -1, np.int32)
+    for i, (x, y) in enumerate(pts):
+        for pid in cand_ids[i]:
+            if pid < 0:
+                continue
+            if point_in_polygon_host(np.array([x]), np.array([y]),
+                                     rings[pid])[0]:
+                out[i] = pid
+                break
+    return out
+
+
+def all_cands(n, n_poly):
+    return jnp.tile(jnp.arange(n_poly, dtype=jnp.int32)[None, :], (n, 1))
+
+
+def test_parity_with_host_oracle(poly_world):
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = all_cands(n, len(rings))
+    need = jnp.ones((n,), bool)
+    expect = oracle_first_match(rings, pts, np.asarray(cand))
+    for two_phase in (False, True):
+        assign, stats = resolve_candidates(
+            jnp.asarray(pts), cand, edges, need, cap=n, backend="ref",
+            two_phase=two_phase, cap2=n)
+        np.testing.assert_array_equal(np.asarray(assign), expect)
+        assert int(stats.overflow) == 0
+        assert int(stats.n_need) == n
+
+
+def test_two_phase_matches_sequential(poly_world):
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = all_cands(n, len(rings))
+    need = jnp.asarray(np.arange(n) % 3 != 0)     # a non-trivial subset
+    seq, _ = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                cap=n, backend="ref", two_phase=False)
+    two, _ = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                cap=n, backend="ref", two_phase=True,
+                                cap2=n)
+    np.testing.assert_array_equal(np.asarray(seq), np.asarray(two))
+
+
+def test_overflow_accounting_exact(poly_world):
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = all_cands(n, len(rings))
+    need = jnp.ones((n,), bool)
+    cap = 256
+    assign, stats = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                       cap=cap, backend="ref")
+    assert int(stats.n_need) == n
+    assert int(stats.overflow) == n - cap
+    # Overflowed rows (beyond the first `cap` needed points) keep prior.
+    np.testing.assert_array_equal(np.asarray(assign)[cap:], -1)
+
+
+def test_sentinel_candidates_never_match(poly_world):
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = jnp.full((n, 4), -1, jnp.int32)
+    need = jnp.ones((n,), bool)
+    prior = jnp.arange(n, dtype=jnp.int32)
+    assign, stats = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                       cap=n, backend="ref", prior=prior,
+                                       fallback="prior")
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(prior))
+    assert int(stats.n_pip) == 0
+
+
+def test_fallback_first_uses_slot0(poly_world):
+    """Points outside every candidate get the slot-0 candidate under
+    fallback="first" (the centre-owner policy of the cell index)."""
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = all_cands(n, len(rings))
+    need = jnp.ones((n,), bool)
+    expect = oracle_first_match(rings, pts, np.asarray(cand))
+    assign, _ = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                   cap=n, backend="ref", fallback="first")
+    a = np.asarray(assign)
+    np.testing.assert_array_equal(a[expect >= 0], expect[expect >= 0])
+    np.testing.assert_array_equal(a[expect < 0], 0)   # slot-0 candidate
+
+
+def test_candidate_callable_after_compaction(poly_world):
+    """A callable candidate table sees only compacted rows and must agree
+    with the precomputed-array form."""
+    rings, edges, pts = poly_world
+    n = len(pts)
+    cand = all_cands(n, len(rings))
+    need = jnp.asarray(np.arange(n) % 2 == 0)
+    a1, _ = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                               cap=n, backend="ref")
+    seen_rows = []
+
+    def cand_fn(idx, sub_pts):
+        seen_rows.append(sub_pts.shape[0])
+        return cand[idx]
+
+    a2, _ = resolve_candidates(jnp.asarray(pts), cand_fn, edges, need,
+                               cap=256, backend="ref")
+    np.testing.assert_array_equal(np.asarray(a1)[np.asarray(need)],
+                                  np.asarray(a2)[np.asarray(need)])
+    assert seen_rows == [256]      # evaluated on the compacted buffer only
+
+
+def test_first_k_candidates_slots():
+    mask = jnp.asarray(np.array([[0, 1, 0, 1, 1],
+                                 [0, 0, 0, 0, 0],
+                                 [1, 0, 0, 0, 1]], np.int8))
+    out = np.asarray(first_k_candidates(mask, 2))
+    np.testing.assert_array_equal(out, [[1, 3], [-1, -1], [0, 4]])
+
+
+def test_resolve_stats_is_pytree():
+    import jax
+    st = ResolveStats(n_need=jnp.int32(3), n_pip=jnp.int32(5),
+                      overflow=jnp.int32(0))
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len(leaves) == 3
