@@ -2,11 +2,17 @@
 strategy plus the fast path's stage-level breakdown, on CPU (the
 paper-representative cell of §Perf).
 
-    PYTHONPATH=src python -m benchmarks.geo_perf
+    PYTHONPATH=src python -m benchmarks.geo_perf            # full run
+    PYTHONPATH=src python -m benchmarks.geo_perf --smoke    # verify-sized
+
+``--smoke`` caps the batch at BENCH_GEO_SMOKE_N (default 20k) and skips
+the gbits stage sweep so scripts/verify.sh can afford to append a row on
+every run — the bench trajectory accumulates with the test history.
 
 Emits ``results/BENCH_geo.json`` — machine-readable points/sec + accuracy
 per strategy — so the bench trajectory accumulates across PRs.
 """
+import argparse
 import json
 import os
 import time
@@ -20,6 +26,7 @@ from repro.core.engine import EngineConfig, GeoEngine
 from repro.core.fast import FastIndex, leaf_codes, locate_cells
 
 N_POINTS = int(os.environ.get("BENCH_GEO_N", 1_000_000))
+SMOKE_N = int(os.environ.get("BENCH_GEO_SMOKE_N", 20_000))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                         "BENCH_geo.json")
 
@@ -35,25 +42,27 @@ def t(fn, *a, r=5):
     return float(np.median(ts))
 
 
-def bench_strategies(census, cov, pts, bid):
-    """points/sec + accuracy for simple / fast-exact / fast-approx /
-    hybrid, all through the GeoEngine facade."""
+def bench_strategies(census, cov, pts, bid, repeats=5):
+    """points/sec + accuracy for simple / fast-exact (legacy + fused) /
+    fast-approx / hybrid, all through the GeoEngine facade."""
     n = pts.shape[0]
     results = {}
     specs = {
         "simple": ("simple", EngineConfig()),
         "fast_exact": ("fast", EngineConfig(mode="exact")),
+        "fast_exact_fused": ("fast", EngineConfig(mode="exact",
+                                                  fused=True)),
         "fast_approx": ("fast", EngineConfig(mode="approx")),
         "hybrid": ("hybrid", EngineConfig()),
     }
     for name, (strategy, cfg) in specs.items():
         eng = GeoEngine.build(census, strategy, cfg, covering=cov)
         f = jax.jit(lambda p, e=eng: e.assign(p).block)
-        dt = t(f, pts)
+        dt = t(f, pts, r=repeats)
         acc = float(np.mean(np.asarray(f(pts)) == bid))
         results[name] = {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
                          "accuracy": acc}
-        print(f"{name:12s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
+        print(f"{name:16s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
               f"acc {acc:.4f}")
     return results
 
@@ -80,17 +89,27 @@ def bench_fast_stages(census, cov, pts, bid):
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="verify-sized run: small batch, no stage sweep")
+    args = ap.parse_args()
+    n_points = min(N_POINTS, SMOKE_N) if args.smoke else N_POINTS
+
     census = common.get_census().census
     cov = common.get_covering(9)
-    xy, bid, *_ = common.sample_points(N_POINTS)
+    xy, bid, *_ = common.sample_points(n_points)
     pts = jnp.asarray(xy)
-    print(f"n={N_POINTS} points, {len(cov.lo)} cells")
+    print(f"n={n_points} points, {len(cov.lo)} cells"
+          + (" [smoke]" if args.smoke else ""))
 
-    results = bench_strategies(census, cov, pts, bid)
-    bench_fast_stages(census, cov, pts, bid)
+    results = bench_strategies(census, cov, pts, bid,
+                               repeats=3 if args.smoke else 5)
+    if not args.smoke:
+        bench_fast_stages(census, cov, pts, bid)
 
     run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
-           "n_points": N_POINTS, "n_cells": int(len(cov.lo)),
+           "n_points": n_points, "n_cells": int(len(cov.lo)),
+           "smoke": bool(args.smoke),
            "backend": jax.default_backend(), "strategies": results}
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     # Append to the run trajectory so successive benchmarks are comparable.

@@ -1,6 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md).
+# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md), then a
+# smoke-sized benchmarks/geo_perf run so every verify appends a row to
+# results/BENCH_geo.json (the bench trajectory accumulates with the test
+# history).  The smoke bench runs even when pytest fails (known-failing
+# model-stack tests must not starve the bench record).  Exit status:
+# pytest's failure wins; a bench failure surfaces only when pytest passed.
 # Usage: scripts/verify.sh [extra pytest args]
-set -euo pipefail
+set -uo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+python -m pytest -x -q "$@"
+status=$?
+python -m benchmarks.geo_perf --smoke
+bench=$?
+[ "$status" -eq 0 ] && status=$bench
+exit $status

@@ -27,7 +27,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as PS
 
 from repro.core.cells import CellCovering
-from repro.core.fast import FastConfig, quantize_codes
+from repro.core.fast import FastConfig, extent_mask, quantize_codes
 from repro.core.geometry import CensusMap
 from repro.core.compact import capacity_for
 from repro.core.resolve import ResolveStats, resolve_candidates
@@ -50,13 +50,14 @@ class ShardedFastIndex:
     block_parent: Any  # [Nb] i32
     county_parent: Any # [Nc] i32
     quant: Any         # [4] f32
+    edge_pool: Any = None  # blocked-CSR EdgePool (replicated; fused path)
     max_level: int = dataclasses.field(metadata=dict(static=True), default=9)
     n_shards: int = dataclasses.field(metadata=dict(static=True), default=16)
 
     def tree_flatten(self):
         leaves = (self.cell_lo, self.cell_hi, self.cell_val, self.cand,
                   self.range_lo, self.block_edges, self.block_parent,
-                  self.county_parent, self.quant)
+                  self.county_parent, self.quant, self.edge_pool)
         return leaves, (self.max_level, self.n_shards)
 
     @classmethod
@@ -75,9 +76,13 @@ INT_MAX = np.int32(2**31 - 1)
 
 
 def shard_covering(cov: CellCovering, census: CensusMap,
-                   n_shards: int) -> ShardedFastIndex:
+                   n_shards: int, with_pool: bool = False
+                   ) -> ShardedFastIndex:
     """Split the covering into ``n_shards`` contiguous Morton slices with
-    (approximately) equal cell counts, padded to a common length."""
+    (approximately) equal cell counts, padded to a common length.
+
+    ``with_pool`` additionally builds the (replicated) blocked-CSR edge
+    pool the fused gather-PIP path needs (FastConfig.fused)."""
     n = len(cov.lo)
     bounds = [int(round(i * n / n_shards)) for i in range(n_shards + 1)]
     lmax = max(bounds[i + 1] - bounds[i] for i in range(n_shards))
@@ -113,24 +118,29 @@ def shard_covering(cov: CellCovering, census: CensusMap,
     x0, x1, y0, y1 = cov.extent
     nn = 1 << cov.max_level
     quant = np.array([x0, y0, nn / (x1 - x0), nn / (y1 - y0)], np.float32)
+    block_edges_np = ops.edges_from_soup_np(census.blocks.verts)
     return ShardedFastIndex(
         cell_lo=jnp.asarray(cell_lo), cell_hi=jnp.asarray(cell_hi),
         cell_val=jnp.asarray(cell_val), cand=jnp.asarray(cand),
         range_lo=jnp.asarray(range_lo),
-        block_edges=jnp.asarray(ops.edges_from_soup_np(census.blocks.verts)),
+        block_edges=jnp.asarray(block_edges_np),
         block_parent=jnp.asarray(census.blocks.parent),
         county_parent=jnp.asarray(census.counties.parent),
         quant=jnp.asarray(quant),
+        edge_pool=(ops.build_edge_pool(block_edges_np)
+                   if with_pool else None),
         max_level=cov.max_level, n_shards=n_shards)
 
 
 def local_lookup(block_edges, lo, hi, val, cand, codes, points,
-                 mode: str, cap: int, backend, active=None):
+                 mode: str, cap: int, backend, active=None,
+                 edge_pool=None):
     """Lookup of ``codes`` against ONE shard's table (padded rows inert).
 
     ``active`` optionally masks rows (e.g. empty dispatch-buffer slots).
     Boundary points go through the shared resolution core (sequential
-    schedule, centre-owner fallback).  Returns (bid, ResolveStats).
+    schedule, centre-owner fallback); ``edge_pool`` routes their PIP
+    through the fused gather-PIP kernel.  Returns (bid, ResolveStats).
     """
     pos = jnp.searchsorted(lo, codes, side="right") - 1
     pos = jnp.clip(pos, 0, lo.shape[0] - 1)
@@ -145,11 +155,13 @@ def local_lookup(block_edges, lo, hi, val, cand, codes, points,
         bid = jnp.where(is_b, cand[brow, 0], bid)
         rs = ResolveStats(n_need=jnp.sum(is_b.astype(jnp.int32)),
                           n_pip=jnp.zeros((), jnp.int32),
-                          overflow=jnp.zeros((), jnp.int32))
+                          overflow=jnp.zeros((), jnp.int32),
+                          phase2_miss=jnp.zeros((), jnp.int32))
     else:
         bid, rs = resolve_candidates(
             points, lambda i, _: cand[brow[i]], block_edges, is_b,
-            cap=cap, backend=backend, prior=bid, fallback="first")
+            cap=cap, backend=backend, prior=bid, fallback="first",
+            edge_pool=edge_pool)
     return bid, rs
 
 
@@ -163,13 +175,20 @@ def assign_fast_distributed(idx: ShardedFastIndex, points: jnp.ndarray,
     n = points.shape[0]
     n_loc = n // dp_size
     cap = capacity_for(n_loc, cfg.cap_boundary)
+    if cfg.fused and cfg.mode == "exact" and idx.edge_pool is None:
+        raise ValueError("FastConfig.fused needs an index built with "
+                         "with_pool=True (shard_covering)")
+    pool = idx.edge_pool if cfg.fused else None
 
     def body(points_loc, lo, hi, val, cand, range_lo):
         lo, hi, val, cand = lo[0], hi[0], val[0], cand[0]
         codes = quantize_codes(idx.quant, idx.max_level, points_loc)
+        # Off-extent points quantize onto the border (see quantize_codes);
+        # mask them so they resolve to -1 instead of a border-cell block.
+        ext = extent_mask(idx.quant, idx.max_level, points_loc)
         bid, rs = local_lookup(idx.block_edges, lo, hi, val, cand,
                                codes, points_loc, cfg.mode, cap,
-                               cfg.backend)
+                               cfg.backend, active=ext, edge_pool=pool)
         # Each point is owned by exactly one shard -> pmax combines.
         bid = jax.lax.pmax(bid, "model")
         axes = ("model",) + dp

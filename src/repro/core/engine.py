@@ -25,6 +25,19 @@ Strategies:
 
 All strategies bottom out in core/resolve.py — the engine adds no PIP or
 compaction logic of its own, it only composes the drivers.
+
+Typical use::
+
+    eng = GeoEngine.build(census, strategy="fast",
+                          cfg=EngineConfig(mode="exact", fused=True))
+    res = eng.assign(points)          # AssignResult
+    res.block                         # [N] i32 block ids (-1 = off-map)
+    res.stats.n_pip                   # candidate PIP tests issued
+
+Everything in ``EngineConfig`` is static (part of the jit cache key);
+``fused=True`` swaps the candidate PIP data path for the fused gather-PIP
+Pallas kernel (kernels/gather_pip.py) in every strategy — results are
+identical, only the memory traffic changes (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -73,22 +86,27 @@ class EngineConfig:
     gbits: int = 4               # top-grid bits (fast/hybrid)
     max_cand: int = 8            # boundary candidate list width
     cap_shard: float = 2.0       # sharded assign: capacity factor vs N/S
+    fused: bool = False          # route candidate PIP through the fused
+    #                              gather-PIP kernel (kernels/gather_pip.py)
+    #                              in every strategy; results identical,
+    #                              the gathered [R, E, 4] HBM buffer gone
 
     def simple_cfg(self) -> SimpleConfig:
         return SimpleConfig(k_cand=self.k_cand, cap_state=self.cap_state,
                             cap_county=self.cap_county,
-                            cap_block=self.cap_block, backend=self.backend)
+                            cap_block=self.cap_block, backend=self.backend,
+                            fused=self.fused)
 
     def fast_cfg(self) -> FastConfig:
         return FastConfig(mode=self.mode, cap_boundary=self.cap_boundary,
-                          backend=self.backend)
+                          backend=self.backend, fused=self.fused)
 
     def hybrid_cascade_cfg(self) -> SimpleConfig:
         # The cascade only sees the (already compacted) boundary buffer, so
         # run it at full capacity — the buffer IS the capacity limit.
         return SimpleConfig(k_cand=self.k_cand, cap_state=1.0,
                             cap_county=1.0, cap_block=1.0,
-                            backend=self.backend)
+                            backend=self.backend, fused=self.fused)
 
 
 @functools.partial(jax.jit, static_argnames=("scfg", "cap_frac"))
@@ -139,10 +157,15 @@ def _sharded_assign(sidx: ShardedFastIndex, points: jnp.ndarray, mesh,
     plan = plan_routes(owner, s, capacity)
     item_for_slot, _ = slot_tables(plan, s, capacity)        # [S*cap]
     ok = item_for_slot >= 0
+    # Off-extent points carry border-clipped codes (see quantize_codes);
+    # deactivate their slots so they come back -1, not a border block.
+    ext = fast_mod.extent_mask(sidx.quant, sidx.max_level, points)
+    slot_ext = ok & ext[jnp.clip(item_for_slot, 0, n - 1)]
     buf_pts = scatter_to_buckets(plan, points, s, capacity,
                                  item_for_slot=item_for_slot
                                  ).reshape(s, capacity, 2)
-    buf_ok = ok.reshape(s, capacity)
+    buf_ok = slot_ext.reshape(s, capacity)
+    pool = sidx.edge_pool if cfg.fused else None
 
     def body(pts_loc, ok_loc, lo, hi, val, cand):
         pts_loc, ok_loc = pts_loc[0], ok_loc[0]
@@ -150,17 +173,19 @@ def _sharded_assign(sidx: ShardedFastIndex, points: jnp.ndarray, mesh,
         codes_loc = quantize_codes(sidx.quant, sidx.max_level, pts_loc)
         bid, rs = local_lookup(
             sidx.block_edges, lo, hi, val, cand, codes_loc, pts_loc,
-            cfg.mode, cap_pip, cfg.backend, active=ok_loc)
+            cfg.mode, cap_pip, cfg.backend, active=ok_loc,
+            edge_pool=pool)
         return (bid[None], jax.lax.psum(rs.n_need, "model"),
                 jax.lax.psum(rs.n_pip, "model"),
-                jax.lax.psum(rs.overflow, "model"))
+                jax.lax.psum(rs.overflow, "model"),
+                jax.lax.psum(rs.phase2_miss, "model"))
 
     ps = jax.sharding.PartitionSpec
-    bid_buf, n_need, n_pip, pip_of = shard_map(
+    bid_buf, n_need, n_pip, pip_of, p2_miss = shard_map(
         body, mesh=mesh,
         in_specs=(ps("model"), ps("model"), ps("model"), ps("model"),
                   ps("model"), ps("model")),
-        out_specs=(ps("model"), ps(), ps(), ps()),
+        out_specs=(ps("model"), ps(), ps(), ps(), ps()),
     )(buf_pts, buf_ok, sidx.cell_lo, sidx.cell_hi, sidx.cell_val,
       sidx.cand)
 
@@ -169,7 +194,7 @@ def _sharded_assign(sidx: ShardedFastIndex, points: jnp.ndarray, mesh,
         bid_buf.reshape(-1), mode="drop")[:n]
     cid, sid = parents_of(sidx, bid)
     stats = {"n_boundary": n_need, "n_pip": n_pip, "overflow": pip_of,
-             "n_dropped": plan.n_dropped}
+             "phase2_miss": p2_miss, "n_dropped": plan.n_dropped}
     return sid, cid, bid, stats
 
 
@@ -203,21 +228,35 @@ class GeoEngine:
         cfg = cfg or EngineConfig()
         simple_index = fast_index = None
         if strategy in ("simple", "hybrid"):
-            simple_index = SimpleIndex.from_census(census)
+            simple_index = SimpleIndex.from_census(census,
+                                                   with_pools=cfg.fused)
         if strategy in ("fast", "hybrid"):
             if covering is None:
                 covering = build_cell_covering(census,
                                                max_level=cfg.max_level,
                                                max_cand=cfg.max_cand)
-            fast_index = FastIndex.from_covering(covering, census,
-                                                 gbits=cfg.gbits)
+            # Only fast-exact runs candidate PIP on the fast index (hybrid
+            # resolves boundaries through the cascade, approx never PIPs),
+            # so only it needs the pool; assign_sharded builds its own.
+            fast_index = FastIndex.from_covering(
+                covering, census, gbits=cfg.gbits,
+                with_pool=(cfg.fused and strategy == "fast"
+                           and cfg.mode == "exact"))
         return cls(strategy, cfg, simple_index=simple_index,
                    fast_index=fast_index, covering=covering, census=census)
 
     # -- single-mesh assign ------------------------------------------------
 
     def assign(self, points: jnp.ndarray) -> AssignResult:
-        """Map [N, 2] (lon, lat) points -> AssignResult."""
+        """Map [N, 2] (lon, lat) points -> AssignResult.
+
+        The result's ``.state/.county/.block`` are [N] i32 ids (-1 = not
+        on the map: outside the extent, in no state bbox, or dropped by a
+        capacity overflow).  ``.stats`` is a GeoStats whose three core
+        counters are comparable across strategies; the strategy's native
+        breakdown (per-level dicts for simple, ``n_boundary``/
+        ``phase2_miss`` for fast/hybrid) rides in ``stats.extra``.
+        """
         if self.strategy == "simple":
             sid, cid, bid, st = simple_mod.assign_simple(
                 self.simple_index, points, self.cfg.simple_cfg())
@@ -247,7 +286,8 @@ class GeoEngine:
                                  "from a census with a cell covering "
                                  "(strategy 'fast' or 'hybrid')")
             self._sharded[n_shards] = shard_covering(
-                self.covering, self.census, n_shards)
+                self.covering, self.census, n_shards,
+                with_pool=(self.cfg.fused and self.cfg.mode == "exact"))
         return self._sharded[n_shards]
 
     def assign_sharded(self, points: jnp.ndarray, mesh) -> AssignResult:

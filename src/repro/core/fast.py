@@ -76,6 +76,8 @@ class FastIndex:
     block_parent: Any   # [Nb] i32
     county_parent: Any  # [Nc] i32
     quant: Any          # [4] f32: (x0, y0, sx, sy) with s = 2^L / extent
+    edge_pool: Any = None  # blocked-CSR EdgePool over the same blocks
+    #                        (fused gather-PIP path; FastConfig.fused)
     # -- static --
     max_level: int = dataclasses.field(metadata=dict(static=True), default=9)
     gbits: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -85,7 +87,7 @@ class FastIndex:
     def tree_flatten(self):
         leaves = (self.cell_lo, self.cell_hi, self.cell_val, self.cand,
                   self.top_start, self.block_edges, self.block_parent,
-                  self.county_parent, self.quant)
+                  self.county_parent, self.quant, self.edge_pool)
         return leaves, (self.max_level, self.gbits, self.search_iters)
 
     @classmethod
@@ -100,9 +102,14 @@ class FastIndex:
 
     @classmethod
     def from_covering(cls, cov: CellCovering, census: CensusMap,
-                      gbits: int = 4):
+                      gbits: int = 4, with_pool: bool = False):
         """gbits = quadtree levels resolved by the direct-indexed top grid
-        (the paper's F1/F2/F4 trie-fanout analogue; 2*gbits key bits)."""
+        (the paper's F1/F2/F4 trie-fanout analogue; 2*gbits key bits).
+
+        ``with_pool`` additionally builds the blocked-CSR edge pool the
+        fused gather-PIP path needs (FastConfig.fused); off by default so
+        legacy callers pay neither the host build nor the device copy.
+        """
         assert gbits <= cov.max_level
         nb = 1 << (2 * gbits)
         shift = 2 * (cov.max_level - gbits)
@@ -121,17 +128,19 @@ class FastIndex:
         x0, x1, y0, y1 = cov.extent
         n = 1 << cov.max_level
         quant = np.array([x0, y0, n / (x1 - x0), n / (y1 - y0)], np.float32)
+        block_edges_np = ops.edges_from_soup_np(census.blocks.verts)
         return cls(
             cell_lo=jnp.asarray(cov.lo),
             cell_hi=jnp.asarray(cov.hi),
             cell_val=jnp.asarray(cov.val),
             cand=jnp.asarray(cov.cand),
             top_start=jnp.asarray(starts),
-            block_edges=jnp.asarray(ops.edges_from_soup_np(
-                census.blocks.verts)),
+            block_edges=jnp.asarray(block_edges_np),
             block_parent=jnp.asarray(census.blocks.parent),
             county_parent=jnp.asarray(census.counties.parent),
             quant=jnp.asarray(quant),
+            edge_pool=(ops.build_edge_pool(block_edges_np)
+                       if with_pool else None),
             max_level=cov.max_level,
             gbits=gbits,
             search_iters=iters,
@@ -142,13 +151,31 @@ def quantize_codes(quant: jnp.ndarray, max_level: int,
                    points: jnp.ndarray) -> jnp.ndarray:
     """Fixed-point quantize + Morton-interleave [N, 2] points to leaf codes
     given the bare quant params [4] = (x0, y0, sx, sy) — usable by any
-    index flavour (FastIndex, ShardedFastIndex)."""
+    index flavour (FastIndex, ShardedFastIndex).
+
+    Off-extent coordinates CLIP onto the grid border, so a far-outside
+    query maps to a border cell's leaf code.  Every caller that turns a
+    code into a block id must therefore also apply ``extent_mask`` —
+    otherwise an off-map point silently inherits a border block instead
+    of -1 (the simple cascade's answer for the same point).
+    """
     n = 1 << max_level
     ix = jnp.clip(((points[:, 0] - quant[0]) * quant[2])
                   .astype(jnp.int32), 0, n - 1)
     iy = jnp.clip(((points[:, 1] - quant[1]) * quant[3])
                   .astype(jnp.int32), 0, n - 1)
     return morton(ix, iy)
+
+
+def extent_mask(quant: jnp.ndarray, max_level: int,
+                points: jnp.ndarray) -> jnp.ndarray:
+    """[N] bool — True where the point lies inside the quantization extent
+    (the map bbox).  The companion of ``quantize_codes``: codes of points
+    outside this mask are border-clipped and must not resolve to a block."""
+    n = 1 << max_level
+    fx = (points[:, 0] - quant[0]) * quant[2]
+    fy = (points[:, 1] - quant[1]) * quant[3]
+    return (fx >= 0) & (fx < n) & (fy >= 0) & (fy < n)
 
 
 def leaf_codes(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
@@ -185,15 +212,21 @@ class FastConfig:
     mode: str = "exact"          # "exact" | "approx"
     cap_boundary: float = 0.25   # compaction capacity for boundary points
     backend: str | None = None
+    fused: bool = False          # exact mode: fused gather-PIP kernel
+    #                              (index.edge_pool) instead of gather +
+    #                              pip_gathered; results are identical
 
 
 def cell_values(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
     """Covering-cell value per point: >= 0 interior block id ("true hit"),
-    -(row+1) boundary candidate row, OUTSIDE if the point is in no cell."""
+    -(row+1) boundary candidate row, OUTSIDE if the point is in no cell
+    or off the map extent (quantization clips, so the extent test is
+    explicit — see ``quantize_codes``)."""
     codes = leaf_codes(index, points)
     cidx = locate_cells(index, codes)
     in_cell = ((index.cell_lo[cidx] <= codes)
                & (codes <= index.cell_hi[cidx]))  # gap => outside the map
+    in_cell = in_cell & extent_mask(index.quant, index.max_level, points)
     return jnp.where(in_cell, index.cell_val[cidx], OUTSIDE)
 
 
@@ -210,6 +243,9 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
                 cfg: FastConfig = FastConfig()):
     """Map [N, 2] points -> (state, county, block ids, stats)."""
     n = points.shape[0]
+    if cfg.fused and cfg.mode == "exact" and index.edge_pool is None:
+        raise ValueError("FastConfig.fused needs an index built with "
+                         "with_pool=True (FastIndex.from_covering)")
     val = cell_values(index, points)
     is_boundary = val < 0
     brow = jnp.clip(-(val + 1), 0, max(index.cand.shape[0] - 1, 0))
@@ -219,6 +255,7 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
     n_boundary = jnp.sum(need.astype(jnp.int32))
     n_pip = jnp.zeros((), jnp.int32)
     overflow = jnp.zeros((), jnp.int32)
+    phase2_miss = jnp.zeros((), jnp.int32)
 
     if index.cand.shape[0] > 0:
         if cfg.mode == "approx":
@@ -238,9 +275,12 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
                 index.block_edges, need,
                 cap=capacity_for(n, cfg.cap_boundary),
                 backend=cfg.backend, prior=bid, fallback="first",
-                two_phase=True)
+                two_phase=True,
+                edge_pool=index.edge_pool if cfg.fused else None)
             n_pip, overflow = rs.n_pip, rs.overflow
+            phase2_miss = rs.phase2_miss
 
     cid, sid = parents_of(index, bid)
-    stats = {"n_boundary": n_boundary, "n_pip": n_pip, "overflow": overflow}
+    stats = {"n_boundary": n_boundary, "n_pip": n_pip, "overflow": overflow,
+             "phase2_miss": phase2_miss}
     return sid, cid, bid, stats

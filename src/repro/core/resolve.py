@@ -26,6 +26,16 @@ shape):
 Backend strings are resolved here, once, via ``ops.resolve_backend`` —
 callers pass the raw ``cfg.backend`` through and never touch kernel
 dispatch themselves.
+
+Candidate PIP has two data paths (identical results):
+
+  * legacy  — gather ``edges_table[pid]`` into an [R, E, 4] HBM buffer,
+    then the gathered crossing kernel (``ops.pip_gathered``);
+  * fused   — pass ``edge_pool=`` (a blocked-CSR ``ops.EdgePool``) and the
+    candidate ids go straight into the fused gather-PIP kernel
+    (``ops.pip_candidates``): edge slices are prefetched HBM -> VMEM
+    inside the kernel's grid loop and the [R, E, 4] gather is never
+    materialized.  Strategies enable it with their ``fused`` config flag.
 """
 from __future__ import annotations
 
@@ -51,18 +61,27 @@ Candidates = Union[jnp.ndarray, CandidateFn]
 class ResolveStats:
     """Per-resolve accounting (device scalars, all i32).
 
-    n_need:   points that required candidate resolution.
-    n_pip:    candidate PIP tests actually issued.
-    overflow: points dropped by the fixed-capacity compaction — counted,
-              never silent (callers re-run stragglers or size caps up).
+    n_need:      points that required candidate resolution.
+    n_pip:       candidate PIP tests actually issued.
+    overflow:    points dropped by the fixed-capacity compaction — counted,
+                 never silent (callers re-run stragglers or size caps up).
+    phase2_miss: two-phase schedule only — slot-0 misses that did not get
+                 a phase-2 compaction slot and therefore degraded straight
+                 to the fallback policy without testing slots 1..K-1.
+                 Distinct from ``overflow``: these points still produce an
+                 answer (the fallback), but a *less exact* one; a non-zero
+                 value says ``cap2`` is undersized for the workload.
+                 Always 0 for the sequential schedule.
     """
 
     n_need: Any
     n_pip: Any
     overflow: Any
+    phase2_miss: Any
 
     def tree_flatten(self):
-        return (self.n_need, self.n_pip, self.overflow), None
+        return (self.n_need, self.n_pip, self.overflow,
+                self.phase2_miss), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -70,15 +89,27 @@ class ResolveStats:
 
     def as_dict(self) -> dict:
         return {"n_need": self.n_need, "n_pip": self.n_pip,
-                "overflow": self.overflow}
+                "overflow": self.overflow, "phase2_miss": self.phase2_miss}
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GeoStats:
-    """Unified cross-strategy stats: the three core counters plus the
-    strategy's native breakdown under ``extra`` (e.g. per-level dicts for
-    the cascade, ``n_boundary`` for the cell index)."""
+    """Unified cross-strategy stats (device scalars unless noted).
+
+    n_need:   points that needed candidate resolution — bbox-ambiguous
+              points for the cascade, boundary-cell hits for the cell
+              index.  The paper's headline ratios (true-hit rate, PIP
+              fraction) read straight off this.
+    n_pip:    candidate PIP tests issued (0 for fast-approx).
+    overflow: points whose resolution was dropped by a fixed-capacity
+              compaction (plus routing drops for assign_sharded); they
+              keep their best-effort id, and a non-zero value means the
+              ``cap_*`` config fractions are undersized for the workload.
+    extra:    the strategy's native breakdown — per-level dicts for the
+              cascade, ``n_boundary``/``phase2_miss``/``cascade`` for the
+              cell-index flavours, ``n_dropped`` for sharded routing.
+    """
 
     n_need: Any
     n_pip: Any
@@ -126,10 +157,22 @@ def first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
     return jnp.where(vals > 0, c - vals, -1)        # [R, k] slot indices
 
 
-def _pip_sequential(points, cand_ids, edges_table, need, backend):
+def _pip_ids(points, pid, edges_table, edge_pool, backend):
+    """Inside mask of each point vs its own candidate id (pid < 0 = never
+    inside).  Fused CSR path when an edge pool is provided; the legacy
+    gather-then-kernel flow otherwise."""
+    if edge_pool is not None:
+        return ops.pip_candidates(points, pid, edge_pool, backend=backend)
+    edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
+    return ops.pip_gathered(points, edges, backend=backend) & (pid >= 0)
+
+
+def _pip_sequential(points, cand_ids, edges_table, need, backend,
+                    edge_pool=None):
     """First matching candidate in slot order, K sequential kernel calls.
 
-    Returns (assign [R] i32 with -1 = no candidate matched, n_pip [] i32).
+    Returns (assign [R] i32 with -1 = no candidate matched, n_pip [] i32,
+    phase2_miss [] i32 == 0).
     """
     k = cand_ids.shape[1]
     assign = jnp.full(points.shape[0], -1, jnp.int32)
@@ -137,36 +180,37 @@ def _pip_sequential(points, cand_ids, edges_table, need, backend):
     for kk in range(k):
         pid = cand_ids[:, kk]
         active = need & (pid >= 0) & (assign < 0)
-        edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
-        inside = ops.pip_gathered(points, edges, backend=backend)
+        inside = _pip_ids(points, pid, edges_table, edge_pool, backend)
         assign = jnp.where(active & inside, pid, assign)
         n_pip = n_pip + jnp.sum(active.astype(jnp.int32))
-    return assign, n_pip
+    return assign, n_pip, jnp.zeros((), jnp.int32)
 
 
-def _pip_two_phase(points, cand_ids, edges_table, need, backend, cap2):
+def _pip_two_phase(points, cand_ids, edges_table, need, backend, cap2,
+                   edge_pool=None):
     """Same assignment as ``_pip_sequential`` in two batched phases:
     slot 0 for everyone, then the remaining K-1 slots for the ``cap2``
     compacted slot-0 misses.  Misses beyond cap2 degrade to the caller's
     fallback policy (they are not counted as overflow — same contract as
-    capacity overflow, the answer is the fallback, not a drop)."""
+    capacity overflow, the answer is the fallback, not a drop — but they
+    ARE counted in phase2_miss so the degradation is visible)."""
     kk = cand_ids.shape[1]
     pid0 = cand_ids[:, 0]
-    edges0 = edges_table[jnp.clip(pid0, 0, edges_table.shape[0] - 1)]
-    in0 = ops.pip_gathered(points, edges0, backend=backend)
+    in0 = _pip_ids(points, pid0, edges_table, edge_pool, backend)
     in0 = in0 & (pid0 >= 0) & need
     n_pip = jnp.sum(need.astype(jnp.int32))
     assign = jnp.where(in0, pid0, -1)
     if kk == 1:
-        return assign, n_pip
+        return assign, n_pip, jnp.zeros((), jnp.int32)
 
     miss = need & ~in0
+    n_miss = jnp.sum(miss.astype(jnp.int32))
     idx2, ok2 = compact_indices(miss, cap2)
+    phase2_miss = n_miss - jnp.sum((miss[idx2] & ok2).astype(jnp.int32))
     rest = cand_ids[idx2, 1:]                        # [R2, K-1]
     flat_pid = rest.reshape(-1)
     pts_rep = jnp.repeat(points[idx2], kk - 1, axis=0)
-    edges = edges_table[jnp.clip(flat_pid, 0, edges_table.shape[0] - 1)]
-    in_r = ops.pip_gathered(pts_rep, edges, backend=backend)
+    in_r = _pip_ids(pts_rep, flat_pid, edges_table, edge_pool, backend)
     in_r = (in_r & (flat_pid >= 0)).reshape(-1, kk - 1)
     n_pip = n_pip + jnp.sum((miss[idx2][:, None]
                              & (rest >= 0)).astype(jnp.int32))
@@ -176,7 +220,7 @@ def _pip_two_phase(points, cand_ids, edges_table, need, backend, cap2):
     val2 = jnp.take_along_axis(rest, best[:, None], axis=1)[:, 0]
     assign = scatter_filled(assign, idx2, ok2,
                             jnp.where(hit2, val2, assign[idx2]))
-    return assign, n_pip
+    return assign, n_pip, phase2_miss
 
 
 def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
@@ -186,7 +230,8 @@ def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
                        prior: jnp.ndarray | None = None,
                        fallback: str = "prior",
                        two_phase: bool = False,
-                       cap2: int | None = None):
+                       cap2: int | None = None,
+                       edge_pool=None):
     """THE compaction + candidate-PIP + fallback primitive.
 
     Args:
@@ -210,10 +255,15 @@ def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
       cap2:        two-phase only — capacity of the phase-2 (slot-0 miss)
                    compaction; defaults to a quarter of ``cap`` (the
                    centre-owner hit rate makes misses the minority).
+      edge_pool:   optional blocked-CSR ``ops.EdgePool`` over the same
+                   polygons as ``edges_table``; when given, candidate PIP
+                   runs through the fused gather-PIP kernel instead of
+                   gather + ``pip_gathered`` (see module docstring).
 
     Returns:
       (assign [N] i32, ResolveStats).  Capacity overflow leaves ``prior``
-      untouched and is counted in stats.overflow.
+      untouched and is counted in stats.overflow; phase-2 capacity misses
+      degrade to ``fallback`` and are counted in stats.phase2_miss.
     """
     n = points.shape[0]
     backend = ops.resolve_backend(backend)
@@ -229,11 +279,13 @@ def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
     if two_phase:
         if cap2 is None:
             cap2 = capacity_for(cap, 0.25, ceiling=cap)
-        resolved, n_pip = _pip_two_phase(sub_pts, sub_cand, edges_table,
-                                         sub_need, backend, cap2)
+        resolved, n_pip, p2_miss = _pip_two_phase(
+            sub_pts, sub_cand, edges_table, sub_need, backend, cap2,
+            edge_pool=edge_pool)
     else:
-        resolved, n_pip = _pip_sequential(sub_pts, sub_cand, edges_table,
-                                          sub_need, backend)
+        resolved, n_pip, p2_miss = _pip_sequential(
+            sub_pts, sub_cand, edges_table, sub_need, backend,
+            edge_pool=edge_pool)
     if fallback == "first":
         fb = jnp.where(sub_cand[:, 0] >= 0, sub_cand[:, 0], -1)
     elif fallback == "prior":
@@ -247,4 +299,4 @@ def resolve_candidates(points: jnp.ndarray, cand_ids: Candidates,
     n_need = jnp.sum(need.astype(jnp.int32))
     overflow = n_need - jnp.sum(sub_need.astype(jnp.int32))
     return assign, ResolveStats(n_need=n_need, n_pip=n_pip,
-                                overflow=overflow)
+                                overflow=overflow, phase2_miss=p2_miss)

@@ -54,6 +54,9 @@ class SimpleIndex:
     block_children: Any  # [Nc+1, Cb] i32
     block_parent: Any    # [Nb] i32 (county of each block)
     county_parent: Any   # [Nc] i32
+    state_pool: Any = None   # blocked-CSR EdgePools mirroring the three
+    county_pool: Any = None  # *_edges tables (fused gather-PIP path;
+    block_pool: Any = None   # SimpleConfig.fused)
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -64,31 +67,42 @@ class SimpleIndex:
         return cls(*children)
 
     @classmethod
-    def from_census(cls, census: CensusMap, pad_children: int = 128):
+    def from_census(cls, census: CensusMap, pad_children: int = 128,
+                    with_pools: bool = False):
+        """``with_pools`` additionally builds the blocked-CSR edge pools
+        the fused gather-PIP path needs (SimpleConfig.fused); off by
+        default so legacy callers pay neither the host build nor the
+        device copies."""
         def bbox_with_sentinel(soup):
             bb = np.concatenate(
                 [soup.bbox, np.array([[1.0, 0.0, 1.0, 0.0]], np.float32)], 0)
             return jnp.asarray(bb)
 
         def edges(soup):
-            return jnp.asarray(ops.edges_from_soup_np(soup.verts))
+            return ops.edges_from_soup_np(soup.verts)
 
         def children(soup, n_parents):
             ids, _ = children_tables(soup, n_parents)
             sentinel = np.full((1, ids.shape[1]), -1, np.int32)
             return jnp.asarray(np.concatenate([ids, sentinel], 0))
 
+        se = edges(census.states)
+        ce = edges(census.counties)
+        be = edges(census.blocks)
         return cls(
             state_bbox=bbox_with_sentinel(census.states),
             county_bbox=bbox_with_sentinel(census.counties),
             block_bbox=bbox_with_sentinel(census.blocks),
-            state_edges=edges(census.states),
-            county_edges=edges(census.counties),
-            block_edges=edges(census.blocks),
+            state_edges=jnp.asarray(se),
+            county_edges=jnp.asarray(ce),
+            block_edges=jnp.asarray(be),
             county_children=children(census.counties, census.states.n_poly),
             block_children=children(census.blocks, census.counties.n_poly),
             block_parent=jnp.asarray(census.blocks.parent),
             county_parent=jnp.asarray(census.counties.parent),
+            state_pool=ops.build_edge_pool(se) if with_pools else None,
+            county_pool=ops.build_edge_pool(ce) if with_pools else None,
+            block_pool=ops.build_edge_pool(be) if with_pools else None,
         )
 
 
@@ -101,15 +115,18 @@ class SimpleConfig:
     cap_county: float = 0.5
     cap_block: float = 0.5
     backend: str | None = None  # kernel backend override
+    fused: bool = False      # fused gather-PIP kernel (the *_pool tables)
+    #                          instead of gather + pip_gathered per level
 
 
 def _level_stats(rs) -> dict:
     """Legacy per-level stats dict from a ResolveStats."""
-    return {"n_multi": rs.n_need, "n_pip": rs.n_pip, "overflow": rs.overflow}
+    return {"n_multi": rs.n_need, "n_pip": rs.n_pip,
+            "overflow": rs.overflow, "phase2_miss": rs.phase2_miss}
 
 
 def _level_pass(points, parent, children_table, bbox_table, edges_table,
-                cap: int, k_cand: int, backend):
+                cap: int, k_cand: int, backend, edge_pool=None):
     """One hierarchy level: bbox count/select, then the shared resolution
     core for points in more than one child bbox.
 
@@ -143,7 +160,8 @@ def _level_pass(points, parent, children_table, bbox_table, edges_table,
     # — boundary grazing).
     assign, rs = resolve_candidates(points, cand_fn, edges_table,
                                     unresolved, cap=cap, backend=backend,
-                                    prior=assign, fallback="prior")
+                                    prior=assign, fallback="prior",
+                                    edge_pool=edge_pool)
     return assign, _level_stats(rs)
 
 
@@ -153,6 +171,11 @@ def cascade_assign(index: SimpleIndex, points: jnp.ndarray,
     other strategies — notably the engine's hybrid mode — can embed it."""
     n = points.shape[0]
     backend = cfg.backend
+    if cfg.fused and index.state_pool is None:
+        raise ValueError("SimpleConfig.fused needs an index built with "
+                         "with_pools=True (SimpleIndex.from_census)")
+    pools = ((index.state_pool, index.county_pool, index.block_pool)
+             if cfg.fused else (None, None, None))
 
     # --- Stage 1: states (flat bbox mask over all states) ---
     ns = index.state_bbox.shape[0] - 1
@@ -167,19 +190,19 @@ def cascade_assign(index: SimpleIndex, points: jnp.ndarray,
         points, lambda idx, _: first_k_candidates(mask[idx], cfg.k_cand),
         index.state_edges, unresolved,
         cap=capacity_for(n, cfg.cap_state), backend=backend,
-        prior=sid, fallback="prior")
+        prior=sid, fallback="prior", edge_pool=pools[0])
 
     # --- Stage 2: counties of the point's state ---
     cid, c_stats = _level_pass(points, sid, index.county_children,
                                index.county_bbox, index.county_edges,
                                capacity_for(n, cfg.cap_county),
-                               cfg.k_cand, backend)
+                               cfg.k_cand, backend, edge_pool=pools[1])
 
     # --- Stage 3: blocks of the point's county ---
     bid, b_stats = _level_pass(points, cid, index.block_children,
                                index.block_bbox, index.block_edges,
                                capacity_for(n, cfg.cap_block),
-                               cfg.k_cand, backend)
+                               cfg.k_cand, backend, edge_pool=pools[2])
 
     stats = {"state": _level_stats(rs1), "county": c_stats,
              "block": b_stats}

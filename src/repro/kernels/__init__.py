@@ -1,3 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax-version compat: jax < 0.5 names the Mosaic params TPUCompilerParams,
+# newer jax CompilerParams.  Every kernel module imports it from here.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 DEF_BP = 512
 DEF_BM = 512
 
@@ -69,7 +71,7 @@ def bbox_mask(points: jnp.ndarray, boxes_t: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bp, bm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.int8),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(points, boxes_t)
@@ -105,7 +107,7 @@ def bbox_count_select(points: jnp.ndarray, boxes_t: jnp.ndarray,
             jax.ShapeDtypeStruct((n, 1), jnp.int32),
             jax.ShapeDtypeStruct((n, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(points, boxes_t)

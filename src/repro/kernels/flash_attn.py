@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 DEF_BQ = 256
 DEF_BK = 256
 NEG_INF = -1.0e30
@@ -103,7 +105,7 @@ def flash_attn_bhsd(q, k, v, *, causal: bool = True, bq: int = DEF_BQ,
             pltpu.VMEM((bq_, 1), jnp.float32),      # l
             pltpu.VMEM((bq_, d), jnp.float32),      # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -18,8 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import bbox as bbox_kernels
+from repro.kernels import gather_pip as gather_pip_kernels
 from repro.kernels import pip as pip_kernels
 from repro.kernels import ref
+from repro.kernels.gather_pip import EdgePool, build_edge_pool  # noqa: F401
+# (re-exported: ops is the one import surface strategy code uses)
 
 # A padding point guaranteed outside every bbox / polygon we generate.
 FAR = 1.0e30
@@ -72,6 +75,32 @@ def pip_gathered(points: jnp.ndarray, edges: jnp.ndarray,
     cross = pip_kernels.crossings_gathered(pts, edges_t,
                                            interpret=(b == "interpret"))
     return (cross[:n] & 1).astype(jnp.bool_)
+
+
+def pip_candidates(points: jnp.ndarray, pids: jnp.ndarray, pool: EdgePool,
+                   backend: str | None = None) -> jnp.ndarray:
+    """Fused gather-PIP: inside mask of [N, 2] points vs their own
+    candidate polygon ids [N] (id < 0 = no candidate, never inside).
+
+    The candidate's edge slice is read straight out of ``pool``
+    (blocked-CSR; see kernels/gather_pip.py) — no gathered [N, E, 4]
+    edge table is ever materialized in HBM.
+    """
+    b = resolve_backend(backend)
+    if pool.n_poly == 0:               # empty polygon table: nothing matches
+        return jnp.zeros(points.shape[0], jnp.bool_)
+    valid = pids >= 0
+    safe = jnp.clip(pids, 0, max(pool.n_poly - 1, 0))
+    first = jnp.where(valid, pool.first[safe], 0).astype(jnp.int32)
+    nblk = jnp.where(valid, pool.count[safe], 0).astype(jnp.int32)
+    if b == "ref":
+        cross = ref.crossings_candidates(points, first, nblk, pool.blocks,
+                                         pool.max_blocks)
+    else:
+        cross = gather_pip_kernels.crossings_candidates(
+            first, nblk, points.astype(jnp.float32), pool.blocks,
+            max_blocks=pool.max_blocks, interpret=(b == "interpret"))
+    return (cross & 1).astype(jnp.bool_) & valid
 
 
 def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray,

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 # Default tile sizes: BP on sublanes (multiple of 8), BE on lanes (multiple
 # of 128).  VMEM footprint ~ BP*BE*4B per f32 temp; (256, 512) keeps the
 # working set ~2-3 MiB.
@@ -101,7 +103,7 @@ def crossings_one(points: jnp.ndarray, edges_t: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(points, edges_t)
@@ -125,7 +127,7 @@ def crossings_gathered(points: jnp.ndarray, edges_t: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(points, edges_t)

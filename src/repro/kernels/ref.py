@@ -70,6 +70,41 @@ def pip_gathered(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
     return (crossings_gathered(points, edges) & 1).astype(jnp.bool_)
 
 
+def crossings_candidates(points: jnp.ndarray, first: jnp.ndarray,
+                         count: jnp.ndarray, blocks: jnp.ndarray,
+                         max_blocks: int) -> jnp.ndarray:
+    """Oracle for the fused gather-PIP kernel (kernels/gather_pip.py).
+
+    Args:
+      points: [N, 2] float.
+      first:  [N] i32 — first pool block of each point's candidate.
+      count:  [N] i32 — blocks owned by the candidate (0 = no candidate).
+      blocks: [NB, 4, BE] float blocked-CSR edge pool; block 0 MUST be
+        all-zero (degenerate edges — the masked-gather target).
+      max_blocks: static max of ``count`` over the pool.
+    Returns:
+      [N] int32 crossing counts.
+    """
+    b = jnp.arange(max_blocks, dtype=jnp.int32)[None, :]
+    ix = jnp.where(b < count[:, None], first[:, None] + b, 0)
+    g = blocks[jnp.clip(ix, 0, blocks.shape[0] - 1)]     # [N, MAXB, 4, BE]
+    px = points[:, 0][:, None, None]
+    py = points[:, 1][:, None, None]
+    x1, y1, x2, y2 = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    straddle = (y1 > py) != (y2 > py)
+    lhs = (px - x1) * (y2 - y1)
+    rhs = (py - y1) * (x2 - x1)
+    cross = straddle & ((lhs < rhs) == (y2 > y1))
+    return jnp.sum(cross, axis=(1, 2)).astype(jnp.int32)
+
+
+def pip_candidates(points: jnp.ndarray, first: jnp.ndarray,
+                   count: jnp.ndarray, blocks: jnp.ndarray,
+                   max_blocks: int) -> jnp.ndarray:
+    return (crossings_candidates(points, first, count, blocks, max_blocks)
+            & 1).astype(jnp.bool_)
+
+
 def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray) -> jnp.ndarray:
     """[N, M] int8 membership of N points in M shared boxes (open intervals).
 

@@ -1,6 +1,9 @@
 """GeoEngine facade: strategy agreement (simple == fast(exact) == hybrid),
-hybrid accuracy ordering, and the dispatch-routed sharded assign.
+hybrid accuracy ordering, the dispatch-routed sharded assign, off-extent
+rejection, and fused-kernel routing (EngineConfig.fused).
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -106,3 +109,91 @@ def test_assign_sharded_requires_model_axis(engines, points_small):
     mesh = make_test_mesh((1,), ("data",))
     with pytest.raises(ValueError, match="model"):
         engines["fast"].assign_sharded(jnp.asarray(xy), mesh)
+
+
+def _far_points(census, n_pad: int = 8):
+    """Points far outside the map extent (padded so compaction caps and
+    dispatch capacities stay sane)."""
+    x0, x1, y0, y1 = census.extent
+    w, h = x1 - x0, y1 - y0
+    base = np.array([[x1 + w, (y0 + y1) / 2],       # east, clips onto border
+                     [x0 - 2 * w, y0 - h],          # far southwest corner
+                     [(x0 + x1) / 2, y1 + 0.5 * h],  # north
+                     [x0 - 0.01 * w, (y0 + y1) / 2]], np.float32)  # grazing
+    reps = int(np.ceil(n_pad / len(base)))
+    return jnp.asarray(np.tile(base, (reps, 1))[:n_pad])
+
+
+def test_off_extent_points_rejected_every_strategy(engines, synth_small):
+    """ROADMAP extent-rejection item: quantization clips off-extent points
+    onto the grid border, so without an explicit extent test a far-outside
+    query lands in a border cell and gets that cell's block id.  Every
+    strategy must return -1 instead — matching the simple cascade."""
+    far = _far_points(synth_small.census, 64)
+    for name, eng in engines.items():
+        bid = np.asarray(eng.assign(far).block)
+        np.testing.assert_array_equal(bid, -1, err_msg=name)
+
+
+def test_off_extent_points_rejected_sharded(engines, synth_small):
+    far = _far_points(synth_small.census, 64)
+    mesh = make_test_mesh((1, 1))
+    res = engines["fast"].assign_sharded(far, mesh)
+    np.testing.assert_array_equal(np.asarray(res.block), -1)
+    np.testing.assert_array_equal(np.asarray(res.state), -1)
+
+
+def test_approx_mode_rejects_off_extent(engines, synth_small):
+    approx = GeoEngine.build(
+        synth_small.census, "fast",
+        EngineConfig(backend="ref", mode="approx", max_level=8),
+        covering=engines["fast"].covering)
+    far = _far_points(synth_small.census, 64)
+    np.testing.assert_array_equal(np.asarray(approx.assign(far).block), -1)
+
+
+def test_fused_flag_matches_legacy_all_strategies(engines, synth_small,
+                                                  points_small):
+    """EngineConfig(fused=True) routes every strategy's candidate PIP
+    through the fused gather-PIP kernel; assignments are identical."""
+    xy, bid, *_ = points_small
+    pts = jnp.asarray(xy)
+    fused_cfg = dataclasses.replace(EXACT_CFG, fused=True)
+    for name, eng in engines.items():
+        feng = GeoEngine.build(synth_small.census, name, fused_cfg,
+                               covering=engines["fast"].covering)
+        np.testing.assert_array_equal(
+            np.asarray(feng.assign(pts).block),
+            np.asarray(eng.assign(pts).block), err_msg=name)
+
+
+def test_fused_exact_matches_ground_truth(engines, synth_small,
+                                          points_small):
+    xy, bid, *_ = points_small
+    fused_cfg = dataclasses.replace(EXACT_CFG, fused=True)
+    eng = GeoEngine.build(synth_small.census, "fast", fused_cfg,
+                          covering=engines["fast"].covering)
+    np.testing.assert_array_equal(
+        np.asarray(eng.assign(jnp.asarray(xy)).block), bid)
+
+
+def test_fused_sharded_matches_ground_truth(engines, synth_small,
+                                            points_small):
+    """fused=True is honored by assign_sharded too (the pool rides the
+    sharded index, replicated like block_edges)."""
+    xy, bid, *_ = points_small
+    fused_cfg = dataclasses.replace(EXACT_CFG, fused=True)
+    eng = GeoEngine.build(synth_small.census, "fast", fused_cfg,
+                          covering=engines["fast"].covering)
+    res = eng.assign_sharded(jnp.asarray(xy), make_test_mesh((1, 1)))
+    np.testing.assert_array_equal(np.asarray(res.block), bid)
+
+
+def test_fused_without_pool_raises(engines, points_small):
+    """An index built without pools refuses fused configs loudly instead
+    of silently running the legacy path."""
+    xy, *_ = points_small
+    eng = GeoEngine("fast", dataclasses.replace(EXACT_CFG, fused=True),
+                    fast_index=engines["fast"].fast_index)
+    with pytest.raises(ValueError, match="with_pool"):
+        eng.assign(jnp.asarray(xy))
