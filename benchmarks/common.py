@@ -1,6 +1,8 @@
-"""Shared benchmark helpers: cached synthetic census + covering, timing."""
+"""Shared benchmark helpers: cached synthetic census + covering, timing,
+and the BENCH_geo.json run-trajectory appender."""
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import time
@@ -8,6 +10,26 @@ import time
 import numpy as np
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "cache")
+BENCH_GEO_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                              "BENCH_geo.json")
+
+
+def append_bench_run(run: dict, out_path: str = BENCH_GEO_PATH) -> int:
+    """Append one run object to the bench trajectory file (shared by
+    geo_perf and serve_perf so successive rows stay comparable); returns
+    the new run count.  A corrupt/absent file restarts the trajectory."""
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    runs = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                runs = json.load(f).get("runs", [])
+        except (json.JSONDecodeError, AttributeError):
+            runs = []
+    runs.append(run)
+    with open(out_path, "w") as f:
+        json.dump({"runs": runs}, f, indent=2)
+    return len(runs)
 
 # Benchmark-scale map: 16 states / 128 counties / 3,072 block groups.
 SCALE = dict(seed=0, n_states=16, counties_per_state=8, blocks_per_county=24)

@@ -13,7 +13,6 @@ Emits ``results/BENCH_geo.json`` — machine-readable points/sec + accuracy
 per strategy — so the bench trajectory accumulates across PRs.
 """
 import argparse
-import json
 import os
 import time
 
@@ -57,13 +56,26 @@ def bench_strategies(census, cov, pts, bid, repeats=5):
     }
     for name, (strategy, cfg) in specs.items():
         eng = GeoEngine.build(census, strategy, cfg, covering=cov)
-        f = jax.jit(lambda p, e=eng: e.assign(p).block)
+        # One jitted callable serves both timing and the row's stats
+        # (one compile per strategy); t() blocks on the whole pytree, so
+        # the timed quantity includes the stats scalars — the serving
+        # path computes them anyway, and they are reductions over work
+        # already done.
+        f = jax.jit(lambda p, e=eng: e.assign(p))
         dt = t(f, pts, r=repeats)
-        acc = float(np.mean(np.asarray(f(pts)) == bid))
+        res = f(pts)
+        acc = float(np.mean(np.asarray(res.block) == bid))
+        # GeoStats counters ride in every row (as_dict: n_need / n_pip /
+        # overflow / phase2_miss / boundary count) so the bench history
+        # catches silent degradation — a capacity squeeze or a phase-2
+        # miss creep shows up even when points/sec holds steady.
+        stats = res.stats.as_dict()
         results[name] = {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
-                         "accuracy": acc}
+                         "accuracy": acc, **stats}
         print(f"{name:16s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
-              f"acc {acc:.4f}")
+              f"acc {acc:.4f} | boundary {stats['n_boundary']} "
+              f"pip {stats['n_pip']} overflow {stats['overflow']} "
+              f"p2miss {stats['phase2_miss']}")
     return results
 
 
@@ -111,19 +123,8 @@ def main():
            "n_points": n_points, "n_cells": int(len(cov.lo)),
            "smoke": bool(args.smoke),
            "backend": jax.default_backend(), "strategies": results}
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    # Append to the run trajectory so successive benchmarks are comparable.
-    runs = []
-    if os.path.exists(OUT_PATH):
-        try:
-            with open(OUT_PATH) as f:
-                runs = json.load(f).get("runs", [])
-        except (json.JSONDecodeError, AttributeError):
-            runs = []
-    runs.append(run)
-    with open(OUT_PATH, "w") as f:
-        json.dump({"runs": runs}, f, indent=2)
-    print(f"wrote {os.path.normpath(OUT_PATH)} ({len(runs)} runs)")
+    n_runs = common.append_bench_run(run, OUT_PATH)
+    print(f"wrote {os.path.normpath(OUT_PATH)} ({n_runs} runs)")
 
 
 if __name__ == "__main__":

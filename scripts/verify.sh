@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md), then a
-# smoke-sized benchmarks/geo_perf run so every verify appends a row to
+# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md), then
+# smoke-sized benchmark runs so every verify appends rows to
 # results/BENCH_geo.json (the bench trajectory accumulates with the test
-# history).  The smoke bench runs even when pytest fails (known-failing
-# model-stack tests must not starve the bench record).  Exit status:
-# pytest's failure wins; a bench failure surfaces only when pytest passed.
+# history): benchmarks/geo_perf (batch strategies) and
+# benchmarks/serve_perf (the GeoServer serving path — serve_* rows).
+# The smoke benches run even when pytest fails (known-failing model-stack
+# tests must not starve the bench record).  Exit status: pytest's failure
+# wins; a bench failure surfaces only when pytest passed.
 # Usage: scripts/verify.sh [extra pytest args]
 set -uo pipefail
 cd "$(dirname "$0")/.."
@@ -13,5 +15,8 @@ python -m pytest -x -q "$@"
 status=$?
 python -m benchmarks.geo_perf --smoke
 bench=$?
+python -m benchmarks.serve_perf --smoke
+serve_bench=$?
+[ "$bench" -eq 0 ] && bench=$serve_bench
 [ "$status" -eq 0 ] && status=$bench
 exit $status

@@ -27,7 +27,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as PS
 
 from repro.core.cells import CellCovering
-from repro.core.fast import FastConfig, extent_mask, quantize_codes
+from repro.core.fast import (FastConfig, extent_mask, quant_for_extent,
+                             quantize_codes)
 from repro.core.geometry import CensusMap
 from repro.core.compact import capacity_for
 from repro.core.resolve import ResolveStats, resolve_candidates
@@ -115,9 +116,7 @@ def shard_covering(cov: CellCovering, census: CensusMap,
         range_lo[i] = cov.lo[a]
     range_lo[0] = 0
 
-    x0, x1, y0, y1 = cov.extent
-    nn = 1 << cov.max_level
-    quant = np.array([x0, y0, nn / (x1 - x0), nn / (y1 - y0)], np.float32)
+    quant = quant_for_extent(cov.extent, cov.max_level)
     block_edges_np = ops.edges_from_soup_np(census.blocks.verts)
     return ShardedFastIndex(
         cell_lo=jnp.asarray(cell_lo), cell_hi=jnp.asarray(cell_hi),

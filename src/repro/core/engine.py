@@ -47,6 +47,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fast as fast_mod
 from repro.core import simple as simple_mod
@@ -62,6 +63,7 @@ from repro.core.resolve import AssignResult, GeoStats
 from repro.core.simple import SimpleConfig, SimpleIndex
 from repro.distributed.dispatch import (plan_routes, scatter_to_buckets,
                                         slot_tables)
+from repro.kernels import ops
 from repro.launch.mesh import shard_map
 
 STRATEGIES = ("simple", "fast", "hybrid")
@@ -124,8 +126,16 @@ def _assign_hybrid(findex: FastIndex, sindex: SimpleIndex,
     cap = capacity_for(n, cap_frac)
     idx, slot_ok = compact_indices(need, cap)
     sub_need = need[idx] & slot_ok
+    # Unfilled compaction slots alias row 0; feed the cascade FAR points
+    # there (and on non-boundary rows) so its stats count only real
+    # boundary work — otherwise n_pip would scale with the capacity, and
+    # a padded batch (assign_padded) would report different stats than
+    # the unpadded call.  Result-identical: only sub_need rows' cascade
+    # output is kept below.
+    sub_pts = jnp.where(sub_need[:, None], points[idx],
+                        jnp.float32(ops.FAR))
     _, _, sub_bid, sub_stats = simple_mod.cascade_assign(
-        sindex, points[idx], scfg)
+        sindex, sub_pts, scfg)
     bid = scatter_filled(bid, idx, slot_ok,
                          jnp.where(sub_need & (sub_bid >= 0),
                                    sub_bid, bid[idx]))
@@ -276,6 +286,69 @@ class GeoEngine:
         return AssignResult(sid, cid, bid, GeoStats(
             n_need=st["n_boundary"], n_pip=st["n_pip"],
             overflow=st["overflow"], extra=st))
+
+    def assign_padded(self, points: jnp.ndarray,
+                      n_valid) -> AssignResult:
+        """Shape-stable assign over a padded batch: rows >= ``n_valid``
+        are padding and must not perturb results or stats.
+
+        The serving layer pads every micro-batch up to a small ladder of
+        bucket sizes so each strategy JIT-compiles once per bucket instead
+        of once per request shape (DESIGN.md §10).  Pad rows are rewritten
+        to ``ops.FAR`` before dispatch — a FAR point is outside every
+        extent, bbox, and polygon by the padding convention (DESIGN.md §9),
+        so it resolves to -1 without entering any ``need`` mask, candidate
+        compaction, or PIP call: the returned ``GeoStats`` counters are
+        identical to an unpadded ``assign`` over ``points[:n_valid]``
+        (capacities permitting — caps are sized from the padded batch, so
+        a padded call can only see *less* overflow, never more).  Pad rows
+        come back -1 in all three id arrays.
+        """
+        b = points.shape[0]
+        valid = jnp.arange(b, dtype=jnp.int32) < n_valid
+        masked = jnp.where(valid[:, None], points.astype(jnp.float32),
+                           jnp.float32(ops.FAR))
+        res = self.assign(masked)
+        neg = jnp.int32(-1)
+        return AssignResult(jnp.where(valid, res.state, neg),
+                            jnp.where(valid, res.county, neg),
+                            jnp.where(valid, res.block, neg), res.stats)
+
+    # -- index / extent handles (serving layer) ----------------------------
+
+    def extent_quant(self) -> tuple[np.ndarray, int]:
+        """(quant [4] f32 = (x0, y0, sx, sy), max_level) — the quantization
+        handle serving-layer routers and caches key on.  Taken from the
+        fast index when one exists (bit-identical to the device lookup);
+        derived from the census extent otherwise, with the same formula
+        ``FastIndex.from_covering`` uses."""
+        if self.fast_index is not None:
+            return (np.asarray(self.fast_index.quant),
+                    self.fast_index.max_level)
+        if self.census is None:
+            raise ValueError("extent_quant needs a fast index or a census "
+                             "(engine built via GeoEngine.build)")
+        return (fast_mod.quant_for_extent(self.census.extent,
+                                          self.cfg.max_level),
+                self.cfg.max_level)
+
+    def extent_contains(self, points) -> np.ndarray:
+        """[N] bool (host) — True where the point lies inside this
+        engine's map extent; the serving router's ownership test.  Pure
+        numpy (``fast.np_extent_mask``, the bit-exact host mirror of the
+        ``extent_mask`` every strategy applies internally) — it runs per
+        micro-batch on the serving hot path, so no device round trip."""
+        quant, max_level = self.extent_quant()
+        return fast_mod.np_extent_mask(quant, max_level, points)
+
+    def host_parents(self) -> tuple[np.ndarray, np.ndarray]:
+        """(block_parent [Nb], county_parent [Nc]) as host arrays, so the
+        serving cache can derive county/state ids without a device trip —
+        the same tables ``parents_of`` gathers on device."""
+        index = self.fast_index if self.fast_index is not None \
+            else self.simple_index
+        return (np.asarray(index.block_parent),
+                np.asarray(index.county_parent))
 
     # -- sharded assign ----------------------------------------------------
 

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cells import CellCovering
+from repro.core.cells import CellCovering, morton_np
 from repro.core.compact import capacity_for
 from repro.core.geometry import CensusMap
 from repro.core.resolve import resolve_candidates
@@ -125,9 +125,7 @@ class FastIndex:
         max_span = int(np.max(starts[1:] - np.maximum(starts[:-1] - 1, 0))) \
             if len(cov.lo) else 1
         iters = max(1, int(np.ceil(np.log2(max(max_span, 2)))))
-        x0, x1, y0, y1 = cov.extent
-        n = 1 << cov.max_level
-        quant = np.array([x0, y0, n / (x1 - x0), n / (y1 - y0)], np.float32)
+        quant = quant_for_extent(cov.extent, cov.max_level)
         block_edges_np = ops.edges_from_soup_np(census.blocks.verts)
         return cls(
             cell_lo=jnp.asarray(cov.lo),
@@ -145,6 +143,16 @@ class FastIndex:
             gbits=gbits,
             search_iters=iters,
         )
+
+
+def quant_for_extent(extent, max_level: int) -> np.ndarray:
+    """THE quant vector: [4] f32 = (x0, y0, sx, sy) with s = 2^L / span.
+    Every producer (FastIndex, ShardedFastIndex, engine extent handle,
+    serving cell table) derives it here — the hot-cell cache's host/
+    device bit-exactness rests on this formula never forking."""
+    x0, x1, y0, y1 = extent
+    n = 1 << max_level
+    return np.array([x0, y0, n / (x1 - x0), n / (y1 - y0)], np.float32)
 
 
 def quantize_codes(quant: jnp.ndarray, max_level: int,
@@ -175,6 +183,33 @@ def extent_mask(quant: jnp.ndarray, max_level: int,
     n = 1 << max_level
     fx = (points[:, 0] - quant[0]) * quant[2]
     fy = (points[:, 1] - quant[1]) * quant[3]
+    return (fx >= 0) & (fx < n) & (fy >= 0) & (fy < n)
+
+
+def np_quantize_codes(quant, max_level: int, points) -> np.ndarray:
+    """Host (numpy) mirror of ``quantize_codes``, op-for-op in fp32
+    (subtract, multiply, truncating cast — no FMA contraction on either
+    side), so host and device codes agree bit-exactly.  The serving
+    layer's cache keys on it without a device trip (DESIGN.md §10)."""
+    n = 1 << max_level
+    xy = np.asarray(points, np.float32)
+    q = np.asarray(quant, np.float32)
+    with np.errstate(invalid="ignore", over="ignore"):
+        fx = (xy[:, 0] - q[0]) * q[2]
+        fy = (xy[:, 1] - q[1]) * q[3]
+        ix = np.clip(np.trunc(fx), 0, n - 1).astype(np.int32)
+        iy = np.clip(np.trunc(fy), 0, n - 1).astype(np.int32)
+    return morton_np(ix, iy).astype(np.int32)
+
+
+def np_extent_mask(quant, max_level: int, points) -> np.ndarray:
+    """Host (numpy) mirror of ``extent_mask`` — the serving router's
+    ownership test, zero device traffic."""
+    n = 1 << max_level
+    xy = np.asarray(points, np.float32)
+    q = np.asarray(quant, np.float32)
+    fx = (xy[:, 0] - q[0]) * q[2]
+    fy = (xy[:, 1] - q[1]) * q[3]
     return (fx >= 0) & (fx < n) & (fy >= 0) & (fy < n)
 
 

@@ -91,6 +91,14 @@ class ResolveStats:
         return {"n_need": self.n_need, "n_pip": self.n_pip,
                 "overflow": self.overflow, "phase2_miss": self.phase2_miss}
 
+    def merge(self, other: "ResolveStats") -> "ResolveStats":
+        """Counter-wise sum — aggregates resolves across micro-batches."""
+        return ResolveStats(
+            n_need=self.n_need + other.n_need,
+            n_pip=self.n_pip + other.n_pip,
+            overflow=self.overflow + other.overflow,
+            phase2_miss=self.phase2_miss + other.phase2_miss)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -122,6 +130,49 @@ class GeoStats:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+    def merge(self, other: "GeoStats") -> "GeoStats":
+        """Counter-wise sum across micro-batches (serving aggregation).
+
+        ``extra`` is summed leaf-wise, so both stats must come from the
+        same strategy + config (identical extra tree structure) — the
+        serving layer accumulates one running GeoStats per engine.
+        """
+        return GeoStats(
+            n_need=self.n_need + other.n_need,
+            n_pip=self.n_pip + other.n_pip,
+            overflow=self.overflow + other.overflow,
+            extra=jax.tree_util.tree_map(lambda a, b: a + b,
+                                         self.extra, other.extra))
+
+    def as_dict(self) -> dict:
+        """Flat JSON-ready counters (python ints) for bench rows and
+        serving metrics.  ``phase2_miss`` is summed over however the
+        strategy nests it (top-level for fast, per-level for the cascade,
+        under ``cascade`` for hybrid); ``n_boundary`` falls back to
+        ``n_need`` for strategies without a cell index."""
+        d = {"n_need": int(self.n_need), "n_pip": int(self.n_pip),
+             "overflow": int(self.overflow),
+             "phase2_miss": _sum_nested(self.extra, "phase2_miss")}
+        if isinstance(self.extra, dict):
+            d["n_boundary"] = int(self.extra.get("n_boundary", self.n_need))
+            if "n_dropped" in self.extra:
+                d["n_dropped"] = int(self.extra["n_dropped"])
+        else:
+            d["n_boundary"] = d["n_need"]
+        return d
+
+
+def _sum_nested(tree, key: str) -> int:
+    """Sum every scalar leaf named ``key`` anywhere in a nested dict."""
+    total = 0
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                total += _sum_nested(v, key)
+            elif k == key:
+                total += int(v)
+    return total
 
 
 @jax.tree_util.register_pytree_node_class

@@ -1,0 +1,25 @@
+"""Streaming geo-assignment serving subsystem (DESIGN.md §10).
+
+Public surface:
+
+    from repro.serving import GeoServer, ServeConfig
+
+plus the composable pieces for custom serving loops: ``MicroBatcher`` /
+``QueueFull`` (micro-batching + backpressure), ``HotCellCache`` /
+``CellTable`` (exact hot-cell shortcut), ``ServerMetrics`` (live
+counters / latency percentiles).
+"""
+from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
+                                   MicroBatcher, QueueFull, bucket_for,
+                                   pad_points)
+from repro.serving.cache import (CellTable, HotCellCache, np_extent_mask,
+                                 np_quantize_codes)
+from repro.serving.metrics import LatencyWindow, ServerMetrics
+from repro.serving.server import GeoServer, ServeConfig, ServeResult
+
+__all__ = [
+    "DEFAULT_BUCKETS", "MicroBatch", "MicroBatcher", "QueueFull",
+    "bucket_for", "pad_points", "CellTable", "HotCellCache",
+    "np_extent_mask", "np_quantize_codes", "LatencyWindow",
+    "ServerMetrics", "GeoServer", "ServeConfig", "ServeResult",
+]

@@ -1,0 +1,154 @@
+"""Micro-batching request queue for GeoServer (DESIGN.md §10).
+
+Streaming serving sees requests of every shape: one point from a mobile
+check-in, thousands from a bulk upload.  jit-compiling per request shape
+would thrash the XLA cache, so device batches are padded up a small
+geometric ladder of **bucket sizes** (default 256 / 1k / 4k / 16k): each
+strategy compiles at most once per bucket, ever, and ``GeoServer.warm()``
+can pre-pay all of them before traffic arrives.  The batcher coalesces
+queued requests FIFO into micro-batches capped at the top bucket; the
+*padding* itself (``bucket_for`` + ``pad_points``, defined here) is
+applied by the server at the device edge — after cache hits and region
+routing have shrunk the batch — so padded-slot accounting reflects what
+the engine actually computes.  Pad rows are neutralized downstream by
+``GeoEngine.assign_padded`` (FAR rewrite — they cannot perturb results or
+stats), so over-padding costs only lane-aligned compute, never accuracy.
+
+Backpressure is a bounded queue (``max_queue_points``) with two policies:
+
+  * ``block`` — an arriving request that would overflow the bound makes
+    the caller flush first (serve-now semantics in the synchronous loop);
+  * ``shed``  — the request is refused with ``QueueFull`` and counted, the
+    load-shedding answer when latency matters more than completeness.
+
+The batcher is deliberately dumb about *what* a request is: it queues
+(ticket, points) pairs and hands back ``MicroBatch`` objects whose
+``parts`` say which slice of which ticket each batch row belongs to — the
+server owns result assembly, metrics, and caching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+DEFAULT_BUCKETS = (256, 1024, 4096, 16384)
+
+
+class QueueFull(RuntimeError):
+    """Raised under the ``shed`` policy when the queue bound is hit."""
+
+
+def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest ladder bucket >= n (callers split anything larger than
+    the top bucket, so it also answers for oversized n)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def pad_points(points: np.ndarray, bucket: int) -> np.ndarray:
+    """[n, 2] -> [bucket, 2] f32, zero-padded (the pad *value* is
+    irrelevant — ``assign_padded`` rewrites pad rows to FAR)."""
+    out = np.zeros((bucket, 2), np.float32)
+    out[:len(points)] = points
+    return out
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One coalesced batch (unpadded — the server pads each engine
+    sub-batch up the ladder at the device edge, after cache hits and
+    routing have shrunk it) plus the bookkeeping to scatter results
+    back: ``parts`` rows are (ticket, req_off, batch_off, length)."""
+
+    points: np.ndarray          # [n, 2] f32, n <= top bucket
+    parts: list
+
+
+class MicroBatcher:
+    """Bounded FIFO request queue that drains into bucket-padded
+    micro-batches (see module docstring)."""
+
+    def __init__(self, buckets=DEFAULT_BUCKETS,
+                 max_queue_points: int = 1 << 16, policy: str = "block"):
+        buckets = tuple(int(b) for b in buckets)
+        if not buckets or any(b <= 0 for b in buckets) \
+                or list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be ascending positive ints, "
+                             f"got {buckets!r}")
+        if policy not in ("block", "shed"):
+            raise ValueError(f"unknown backpressure policy {policy!r}; "
+                             f"expected 'block' or 'shed'")
+        self.buckets = buckets
+        self.max_queue_points = int(max_queue_points)
+        self.policy = policy
+        # (ticket, points [n, 2] f32, base_off): base_off is the slice's
+        # offset inside its original request — 0 for fresh puts, > 0 for
+        # requeued tails of split requests (see ``requeue``).
+        self._q: deque = deque()
+        self.queued_points = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def put(self, ticket: Any, points: np.ndarray) -> bool:
+        """Enqueue one request.  Returns False when the ``block`` policy
+        wants the caller to flush first; raises QueueFull under ``shed``.
+        An empty queue always accepts (a single request larger than the
+        bound must still be servable — it just flushes alone)."""
+        n = len(points)
+        if self._q and self.queued_points + n > self.max_queue_points:
+            if self.policy == "shed":
+                raise QueueFull(
+                    f"queue holds {self.queued_points} points, request of "
+                    f"{n} exceeds max_queue_points={self.max_queue_points}")
+            return False
+        self._q.append((ticket, np.asarray(points, np.float32), 0))
+        self.queued_points += n
+        return True
+
+    def requeue(self, entries) -> None:
+        """Push (ticket, points, base_off) slices back to the FRONT of
+        the queue, preserving their order — the server's recovery path
+        when a flush dies mid-serve, so drained-but-unserved work is
+        never lost (it simply serves on the next flush)."""
+        self._q.extendleft(reversed(entries))
+        self.queued_points += sum(len(p) for _, p, _ in entries)
+
+    def drain(self) -> list:
+        """Coalesce every queued request, FIFO, into micro-batches of at
+        most the top bucket.  Requests pack together until the top bucket
+        is full; a request longer than the remaining room is split across
+        batches (its parts record the request-side offsets)."""
+        top = self.buckets[-1]
+        batches: list[MicroBatch] = []
+        chunks: list[np.ndarray] = []
+        parts: list = []
+        fill = 0
+
+        def close():
+            nonlocal chunks, parts, fill
+            if fill:
+                batches.append(
+                    MicroBatch(np.concatenate(chunks, axis=0), parts))
+            chunks, parts, fill = [], [], 0
+
+        while self._q:
+            ticket, pts, base = self._q.popleft()
+            off = 0
+            while off < len(pts):
+                take = min(len(pts) - off, top - fill)
+                if take == 0:
+                    close()
+                    continue
+                chunks.append(pts[off:off + take])
+                parts.append((ticket, base + off, fill, take))
+                fill += take
+                off += take
+        close()
+        self.queued_points = 0
+        return batches

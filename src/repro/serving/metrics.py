@@ -1,0 +1,109 @@
+"""Counters / histograms registry for GeoServer (DESIGN.md §10).
+
+One registry per server accumulates everything the ROADMAP's serving item
+asks to surface: the per-request ``GeoStats``/``ResolveStats`` counters
+(``phase2_miss`` front and centre — a non-zero value says the two-phase
+PIP's cap2 is undersized for live traffic — plus overflow and boundary
+fraction), cache hit/miss traffic, queue depth, batch-fill ratio (valid
+rows / padded slots — how much of the bucket ladder's padding is waste),
+and request latency percentiles over a sliding sample window.
+
+``snapshot()`` renders the whole registry as one JSON-ready dict:
+
+    {"counters": {...},                 # monotonic sums
+     "gauges": {...},                   # last-set values (queue depth)
+     "derived": {"cache_hit_rate", "batch_fill_ratio",
+                 "boundary_fraction", ...},
+     "latency_ms": {"count", "p50", "p90", "p99", "max"}}
+
+Scrapers diff counters between snapshots; the derived block is recomputed
+from counters at snapshot time so it is always self-consistent.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+
+import numpy as np
+
+
+class LatencyWindow:
+    """Sliding window of the most recent N latency samples; percentiles
+    are exact over the window (a serving-loop-friendly stand-in for a
+    streaming sketch)."""
+
+    def __init__(self, window: int = 4096):
+        self._samples: deque = deque(maxlen=int(window))
+        self.count = 0
+
+    def observe(self, seconds: float) -> None:
+        self._samples.append(float(seconds))
+        self.count += 1
+
+    def snapshot_ms(self) -> dict:
+        if not self._samples:
+            return {"count": 0, "p50": None, "p90": None, "p99": None,
+                    "max": None}
+        s = np.asarray(self._samples) * 1e3
+        return {"count": self.count,
+                "p50": float(np.percentile(s, 50)),
+                "p90": float(np.percentile(s, 90)),
+                "p99": float(np.percentile(s, 99)),
+                "max": float(s.max())}
+
+
+class ServerMetrics:
+    """The registry (see module docstring)."""
+
+    def __init__(self, latency_window: int = 4096):
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+        self.latency = LatencyWindow(latency_window)
+
+    def inc(self, name: str, value=1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + value
+
+    def set_gauge(self, name: str, value) -> None:
+        self.gauges[name] = value
+
+    def observe_latency(self, seconds: float) -> None:
+        self.latency.observe(seconds)
+
+    def observe_geo(self, stats) -> None:
+        """Fold one micro-batch's GeoStats into ``geo_*`` counters
+        (``as_dict`` flattens phase2_miss / overflow / boundary count
+        uniformly across strategies)."""
+        for key, value in stats.as_dict().items():
+            self.inc(f"geo_{key}", value)
+
+    def observe_cache(self, snap: dict) -> None:
+        """Absorb a HotCellCache snapshot.  Cache counters are absolute
+        (the cache owns them), so they are *set*, not summed — the server
+        refreshes them on every snapshot without double-counting."""
+        for key in ("hits", "misses", "insertions", "evictions",
+                    "entries"):
+            self.counters[f"cache_{key}"] = snap[key]
+
+    # -- rendering ---------------------------------------------------------
+
+    def _derived(self) -> dict:
+        c = self.counters.get
+        d = {}
+        probes = c("cache_hits", 0) + c("cache_misses", 0)
+        d["cache_hit_rate"] = c("cache_hits", 0) / probes if probes else 0.0
+        slots = c("padded_slots", 0)
+        d["batch_fill_ratio"] = c("valid_slots", 0) / slots if slots else 0.0
+        served = c("points_served", 0)
+        d["boundary_fraction"] = \
+            c("geo_n_boundary", 0) / served if served else 0.0
+        d["pip_per_point"] = c("geo_n_pip", 0) / served if served else 0.0
+        return d
+
+    def snapshot(self) -> dict:
+        return {"counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "derived": self._derived(),
+                "latency_ms": self.latency.snapshot_ms()}
+
+    def to_json(self, indent=None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

@@ -1,0 +1,407 @@
+"""GeoServer: the streaming geo-assignment serving facade (DESIGN.md §10).
+
+Turns one or more ``GeoEngine``s into an online service over a request
+stream:
+
+    server = GeoServer.build(census, strategy="hybrid")
+    server.warm()                         # pre-pay every bucket's JIT
+    res = server.submit(points)           # [n, 2] -> ServeResult
+    print(server.metrics.to_json())       # live counters / latency
+
+The pieces (each its own module, composable without the facade):
+
+  * ``batcher.MicroBatcher``  — bounded FIFO queue; coalesces requests
+    into micro-batches padded up the bucket ladder so each strategy
+    compiles once per bucket, with block/shed backpressure;
+  * ``cache.HotCellCache``    — exact host-side hot-cell shortcut for
+    interior-cell traffic, full-engine fallback for everything else;
+  * ``metrics.ServerMetrics`` — counters/gauges/latency registry
+    (``phase2_miss`` et al. surfaced per the ROADMAP serving item).
+
+**Multi-region routing**: pass a list of engines (one per regional index
+— the production shape where no single host holds the national index)
+and ``submit`` routes each point to its owning region via the engines'
+extent masks (PR 2's ``extent_mask``, exposed through
+``GeoEngine.extent_contains``).  Ownership is deterministic: the first
+region (list order) whose extent contains the point wins, so a point on
+a shared border resolves identically on every submit.  Points in no
+region's extent come back -1 with ``region == -1`` (true for the
+single-engine server too — extents cover all map geometry, so the
+engine's own answer for such points is -1 anyway and they skip the
+device).  Results merge back in input order whatever the routing.
+
+Bit-identity contract: with the cache off, every served point's
+(state, county, block) equals a direct ``engine.assign`` on the owning
+engine — padding is FAR-neutralized, coalescing never reorders results.
+With the cache on the same holds for every exact engine configuration
+(see cache.py for the interior-cell argument and the overflow caveat).
+
+The serving loop is synchronous and single-threaded by design — the unit
+of concurrency in this stack is the device batch, not the Python thread;
+an async front-end would own the socket and call ``enqueue``/``flush``
+on its event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cells import build_cell_covering
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.core.geometry import CensusMap
+from repro.core.resolve import GeoStats
+from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
+                                   MicroBatcher, QueueFull, bucket_for,
+                                   pad_points)
+from repro.core.fast import np_extent_mask, np_quantize_codes
+from repro.serving.cache import CellTable, HotCellCache
+from repro.serving.metrics import ServerMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Static serving knobs."""
+
+    buckets: tuple = DEFAULT_BUCKETS   # micro-batch padding ladder
+    max_queue_points: int = 1 << 16    # backpressure bound
+    policy: str = "block"              # "block" | "shed" (batcher.py)
+    cache: bool = True                 # hot-cell cache (cache.py)
+    cache_capacity: int = 1 << 16      # LRU entries per region
+    latency_window: int = 4096         # latency percentile sample window
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Per-request outcome, rows in input order.  ``region`` is the index
+    of the owning engine (-1 = in no region's extent); ids are that
+    region's local (state, county, block) ids, -1 = not on its map."""
+
+    state: np.ndarray
+    county: np.ndarray
+    block: np.ndarray
+    region: np.ndarray
+    latency_s: float
+
+
+class _Ticket:
+    """One in-flight request: preallocated result arrays filled as its
+    micro-batch parts complete (a request can span batches)."""
+
+    __slots__ = ("state", "county", "block", "region", "_remaining",
+                 "_t0", "latency_s")
+
+    def __init__(self, n: int, t0: float):
+        self.state = np.full(n, -1, np.int32)
+        self.county = np.full(n, -1, np.int32)
+        self.block = np.full(n, -1, np.int32)
+        self.region = np.full(n, -1, np.int32)
+        self._remaining = n
+        self._t0 = t0
+        self.latency_s = 0.0 if n == 0 else None
+
+    def fill(self, req_off: int, length: int, sid, cid, bid, region):
+        sl = slice(req_off, req_off + length)
+        self.state[sl] = sid
+        self.county[sl] = cid
+        self.block[sl] = bid
+        self.region[sl] = region
+        self._remaining -= length
+        if self._remaining == 0:
+            self.latency_s = time.perf_counter() - self._t0
+
+    @property
+    def done(self) -> bool:
+        return self._remaining == 0
+
+    def result(self) -> ServeResult:
+        if not self.done:
+            raise RuntimeError("request not fully served yet — flush()")
+        return ServeResult(self.state, self.county, self.block,
+                           self.region, self.latency_s)
+
+
+@dataclasses.dataclass
+class _Region:
+    """One hosted engine plus its host-side serving companions (quant
+    and parent tables snapshotted once at construction — the routing /
+    cache-hit hot paths never touch the device)."""
+
+    engine: GeoEngine
+    quant: np.ndarray                     # [4] f32, host snapshot
+    max_level: int
+    block_parent: np.ndarray
+    county_parent: np.ndarray
+    cache: Optional[HotCellCache]
+    stats: Optional[GeoStats] = None      # merged across micro-batches
+
+    def host_parents_of(self, bid: np.ndarray):
+        """(state, county) from block ids — cache hits only: hits are
+        interior cells, so bid >= 0 and the derivation is complete.
+        Engine misses keep the engine's own state/county instead (the
+        cascade can resolve a state yet lose the block — see
+        _serve_region)."""
+        cid = np.where(bid >= 0,
+                       self.block_parent[np.clip(bid, 0, None)], -1)
+        sid = np.where(cid >= 0,
+                       self.county_parent[np.clip(cid, 0, None)], -1)
+        return sid.astype(np.int32), cid.astype(np.int32)
+
+
+class GeoServer:
+    """Streaming serving facade over one or more GeoEngines (see module
+    docstring)."""
+
+    def __init__(self, engines: Union[GeoEngine, Sequence[GeoEngine]],
+                 cfg: Optional[ServeConfig] = None, *, covering=None):
+        """``covering`` optionally provides the covering(s) the hot-cell
+        cache needs (one, or one per engine) — for engines without one
+        (strategy "simple") it is otherwise built from the engine's
+        census, a one-time host BFS."""
+        self.cfg = cfg or ServeConfig()
+        if isinstance(engines, GeoEngine):
+            engines = [engines]
+        if not engines:
+            raise ValueError("GeoServer needs at least one engine")
+        coverings = covering if isinstance(covering, (list, tuple)) \
+            else [covering] * len(engines)
+        if len(coverings) != len(engines):
+            raise ValueError("covering list must match engines")
+        self.regions = [self._make_region(e, c)
+                        for e, c in zip(engines, coverings)]
+        self.metrics = ServerMetrics(self.cfg.latency_window)
+        self.batcher = MicroBatcher(self.cfg.buckets,
+                                    self.cfg.max_queue_points,
+                                    self.cfg.policy)
+
+    def _make_region(self, engine: GeoEngine, covering) -> _Region:
+        block_parent, county_parent = engine.host_parents()
+        cache = None
+        if self.cfg.cache:
+            cov = covering if covering is not None else engine.covering
+            if cov is None:
+                if engine.census is None:
+                    raise ValueError(
+                        "the hot-cell cache needs a covering: pass "
+                        "covering=, build the engine from a census, or "
+                        "serve with ServeConfig(cache=False)")
+                cov = build_cell_covering(engine.census,
+                                          max_level=engine.cfg.max_level,
+                                          max_cand=engine.cfg.max_cand)
+            cache = HotCellCache(CellTable.from_covering(cov),
+                                 self.cfg.cache_capacity)
+        quant, max_level = engine.extent_quant()
+        return _Region(engine, quant, max_level, block_parent,
+                       county_parent, cache)
+
+    @classmethod
+    def build(cls, census: CensusMap, strategy: str = "fast",
+              cfg: Optional[ServeConfig] = None,
+              engine_cfg: Optional[EngineConfig] = None) -> "GeoServer":
+        """Single-region convenience: build the engine and serve it."""
+        engine = GeoEngine.build(census, strategy,
+                                 engine_cfg or EngineConfig())
+        return cls(engine, cfg)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warm(self, buckets: Optional[Sequence[int]] = None) -> dict:
+        """Pre-compile every (bucket, engine) pair the ladder can emit by
+        running an all-padding batch through each; returns bucket ->
+        wall seconds (compile time on first call, ~0 after).  Call before
+        taking traffic so no live request pays an XLA compile."""
+        times = {}
+        for bucket in buckets or self.cfg.buckets:
+            t0 = time.perf_counter()
+            zeros = jnp.zeros((int(bucket), 2), jnp.float32)
+            for region in self.regions:
+                jax.block_until_ready(
+                    region.engine.assign_padded(zeros, 0).block)
+            times[int(bucket)] = time.perf_counter() - t0
+            self.metrics.inc("warm_batches")
+        return times
+
+    # -- request path ------------------------------------------------------
+
+    def enqueue(self, points) -> _Ticket:
+        """Queue one request ([n, 2] lon/lat); returns its ticket.  Under
+        the "shed" policy a full queue raises QueueFull (counted); under
+        "block" it triggers an inline flush to make room."""
+        points = np.asarray(points, np.float32).reshape(-1, 2)
+        ticket = _Ticket(len(points), time.perf_counter())
+        self.metrics.inc("requests")
+        self.metrics.inc("points_in", len(points))
+        if len(points) == 0:
+            return ticket                  # trivially complete
+        try:
+            accepted = self.batcher.put(ticket, points)
+        except QueueFull:
+            self.metrics.inc("shed_requests")
+            self.metrics.inc("shed_points", len(points))
+            raise
+        if not accepted:                   # "block": serve-now, then queue
+            self.flush()
+            self.batcher.put(ticket, points)
+        self._update_queue_gauges()
+        return ticket
+
+    def submit(self, points) -> ServeResult:
+        """Synchronous round trip: enqueue + flush + result."""
+        ticket = self.enqueue(points)
+        if not ticket.done:
+            self.flush()
+        return ticket.result()
+
+    def flush(self) -> int:
+        """Drain the queue through the engines; returns micro-batches
+        served.  Flushing an empty queue is a no-op.  If serving dies
+        mid-flush (device error in one engine), every drained-but-
+        unserved batch — including the failed one, whose tickets are
+        untouched until the batch completes — is requeued at the front
+        of the queue, so no request is lost: the exception propagates
+        and a later flush() retries."""
+        batches = self.batcher.drain()
+        served = 0
+        try:
+            for mb in batches:
+                self._serve_batch(mb)
+                served += 1
+        finally:
+            if served < len(batches):
+                self.batcher.requeue(
+                    [(t, mb.points[bo:bo + ln], ro)
+                     for mb in batches[served:]
+                     for (t, ro, bo, ln) in mb.parts])
+                self.metrics.inc("failed_flushes")
+            if served and any(r.cache is not None for r in self.regions):
+                # Keep cache_* counters fresh so metrics.snapshot()/
+                # to_json() is accurate without GeoServer.snapshot().
+                self.metrics.observe_cache(self.cache_snapshot())
+            self._update_queue_gauges()
+        return len(batches)
+
+    def _update_queue_gauges(self) -> None:
+        self.metrics.set_gauge("queue_depth_points",
+                               self.batcher.queued_points)
+        self.metrics.set_gauge("queue_depth_requests", len(self.batcher))
+
+    # -- serving internals -------------------------------------------------
+
+    def _route(self, pts: np.ndarray) -> np.ndarray:
+        """Owning region per point: first region (list order) whose
+        extent contains it — deterministic on shared/overlapping borders;
+        -1 when no extent matches (single- and multi-region alike, so
+        ``region == -1`` always means "in no region's extent").  Unowned
+        points skip the device and answer -1 directly — result-identical
+        to asking an engine, since the extent covers all of its map
+        geometry and every strategy rejects off-extent points (PR 2)."""
+        owner = np.full(len(pts), -1, np.int32)
+        for r_ix, region in enumerate(self.regions):
+            inside = np_extent_mask(region.quant, region.max_level, pts)
+            owner = np.where((owner < 0) & inside, r_ix, owner)
+        return owner
+
+    def _serve_batch(self, mb: MicroBatch) -> None:
+        pts = mb.points
+        n = len(pts)
+        owner = self._route(pts)
+        sid = np.full(n, -1, np.int32)
+        cid = np.full(n, -1, np.int32)
+        bid = np.full(n, -1, np.int32)
+        for r_ix, region in enumerate(self.regions):
+            sel = np.nonzero(owner == r_ix)[0]
+            if sel.size:
+                rs, rc, rb = self._serve_region(region, pts[sel])
+                sid[sel], cid[sel], bid[sel] = rs, rc, rb
+        self.metrics.inc("batches")
+        self.metrics.inc("points_served", n)
+        for ticket, req_off, batch_off, length in mb.parts:
+            bsl = slice(batch_off, batch_off + length)
+            ticket.fill(req_off, length, sid[bsl], cid[bsl], bid[bsl],
+                        owner[bsl])
+            if ticket.done:
+                self.metrics.observe_latency(ticket.latency_s)
+
+    def _serve_region(self, region: _Region, pts: np.ndarray):
+        """Resolve ``pts`` against one region: hot-cell cache hits on the
+        host, everything else re-bucketed through the engine's padded
+        assign; returns (state, county, block) [m] i32 in input order.
+
+        Miss rows keep the engine's own state/county — NOT a re-derivation
+        from the block id: the cascade can resolve a point's state yet
+        lose it at the county/block level (bbox gap, capacity overflow),
+        and that partial answer must survive serving bit-identically.
+        Cache hits are interior cells (block always >= 0), so for them
+        the host parent tables give the same complete answer."""
+        m = len(pts)
+        sid = np.full(m, -1, np.int32)
+        cid = np.full(m, -1, np.int32)
+        bid = np.full(m, -1, np.int32)
+        miss = np.ones(m, bool)
+        codes = None
+        if region.cache is not None:
+            codes = np_quantize_codes(region.cache.table.quant,
+                                      region.cache.table.max_level, pts)
+            eligible = np_extent_mask(region.cache.table.quant,
+                                      region.cache.table.max_level, pts)
+            if eligible.any():
+                el = np.nonzero(eligible)[0]
+                cbid, hit = region.cache.lookup(codes[el])
+                hit_rows = el[hit]
+                bid[hit_rows] = cbid[hit]
+                sid[hit_rows], cid[hit_rows] = \
+                    region.host_parents_of(bid[hit_rows])
+                miss[hit_rows] = False
+            # Off-extent points stay misses: the engine answers them -1,
+            # and their border-clipped codes must never touch the cache.
+        mi = np.nonzero(miss)[0]
+        if mi.size:
+            bucket = bucket_for(mi.size, self.cfg.buckets)
+            padded = pad_points(pts[mi], bucket)
+            # Slot accounting at the device edge: this is the padding the
+            # engine actually computes, post-cache and post-routing —
+            # batch_fill_ratio measures real ladder waste.
+            self.metrics.inc("padded_slots", bucket)
+            self.metrics.inc("valid_slots", mi.size)
+            res = region.engine.assign_padded(jnp.asarray(padded), mi.size)
+            sid[mi] = np.asarray(res.state)[:mi.size]
+            cid[mi] = np.asarray(res.county)[:mi.size]
+            bid[mi] = np.asarray(res.block)[:mi.size]
+            region.stats = res.stats if region.stats is None \
+                else region.stats.merge(res.stats)
+            self.metrics.observe_geo(res.stats)
+            if region.cache is not None:
+                learnable = mi[eligible[mi]]
+                if learnable.size:
+                    region.cache.learn(codes[learnable])
+        return sid, cid, bid
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def stats(self) -> list:
+        """Per-region merged GeoStats (None until that region served)."""
+        return [r.stats for r in self.regions]
+
+    def cache_snapshot(self) -> dict:
+        """Aggregate hot-cell cache counters over all regions."""
+        agg = {"entries": 0, "capacity": 0, "hits": 0, "misses": 0,
+               "insertions": 0, "evictions": 0}
+        for region in self.regions:
+            if region.cache is not None:
+                snap = region.cache.snapshot()
+                for key in agg:
+                    agg[key] += snap[key]
+        probes = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = agg["hits"] / probes if probes else 0.0
+        return agg
+
+    def snapshot(self) -> dict:
+        """The live-metrics JSON snapshot (refreshes cache counters)."""
+        self.metrics.observe_cache(self.cache_snapshot())
+        self._update_queue_gauges()
+        return self.metrics.snapshot()

@@ -1,0 +1,429 @@
+"""GeoServer serving subsystem (DESIGN.md §10): bucket-ladder batching,
+padded-assign stats purity, hot-cell cache exactness, bit-identity with
+direct GeoEngine.assign, backpressure, metrics schema, and multi-region
+routing edge cases.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.core.resolve import ResolveStats
+from repro.core.synth import build_synth_census
+from repro.serving import (GeoServer, MicroBatcher, QueueFull, ServeConfig,
+                           bucket_for)
+
+EXACT_CFG = EngineConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                         cap_block=1.0, cap_boundary=1.0, max_level=8)
+FUSED_CFG = EngineConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                         cap_block=1.0, cap_boundary=1.0, max_level=8,
+                         fused=True)
+BUCKETS = (64, 256, 1024)
+# Mixed request sizes exercising every bucket, splits, and coalescing.
+STREAM = (1, 7, 300, 555, 1024, 113)
+
+
+@pytest.fixture(scope="module")
+def engines(synth_small):
+    census = synth_small.census
+    fast = GeoEngine.build(census, "fast", FUSED_CFG)
+    return {
+        "simple": GeoEngine.build(census, "simple", EXACT_CFG),
+        "fast_fused": fast,
+        "hybrid": GeoEngine.build(census, "hybrid", EXACT_CFG,
+                                  covering=fast.covering),
+    }
+
+
+def _serve_stream(server, xy):
+    off, outs = 0, []
+    for n in STREAM:
+        res = server.submit(xy[off:off + n])
+        outs.append(res)
+        off += n
+    return off, outs
+
+
+# -- batcher unit tests ------------------------------------------------------
+
+def test_bucket_for_ladder():
+    assert bucket_for(1, BUCKETS) == 64
+    assert bucket_for(64, BUCKETS) == 64
+    assert bucket_for(65, BUCKETS) == 256
+    assert bucket_for(1024, BUCKETS) == 1024
+    assert bucket_for(5000, BUCKETS) == 1024      # oversize -> top (split)
+
+
+def test_batcher_coalesces_fifo_and_splits():
+    b = MicroBatcher(buckets=BUCKETS, max_queue_points=1 << 16)
+    sizes = (10, 50, 1100, 30)                    # 1100 must split
+    for i, n in enumerate(sizes):
+        pts = np.full((n, 2), float(i), np.float32)
+        assert b.put(f"t{i}", pts)
+    batches = b.drain()
+    assert b.queued_points == 0 and len(b) == 0
+    # Unpadded coalesced batches, capped at the top bucket (padding
+    # happens at the device edge — see batcher.py docstring).
+    assert [len(mb.points) for mb in batches] == [1024, 166]
+    # FIFO order and request-side offsets survive the split.
+    flat = [(t, ro, ln) for mb in batches for (t, ro, _, ln) in mb.parts]
+    assert flat == [("t0", 0, 10), ("t1", 0, 50), ("t2", 0, 964),
+                    ("t2", 964, 136), ("t3", 0, 30)]
+
+
+def test_batcher_validation():
+    with pytest.raises(ValueError, match="buckets"):
+        MicroBatcher(buckets=(256, 64))
+    with pytest.raises(ValueError, match="policy"):
+        MicroBatcher(policy="drop")
+
+
+# -- padded assign: stats purity (satellite) ---------------------------------
+
+@pytest.mark.parametrize("name", ["simple", "fast_fused", "hybrid"])
+def test_assign_padded_stats_pure_and_pads_minus_one(engines, points_small,
+                                                     name):
+    """Trailing pad rows must come back -1 in all three id arrays and
+    must not perturb a single GeoStats counter vs the unpadded call."""
+    eng = engines[name]
+    xy, *_ = points_small
+    n = 2000
+    direct = eng.assign(jnp.asarray(xy[:n]))
+    padded = np.zeros((2048, 2), np.float32)
+    padded[:n] = xy[:n]
+    res = eng.assign_padded(jnp.asarray(padded), n)
+    for field in ("state", "county", "block"):
+        got = np.asarray(getattr(res, field))
+        np.testing.assert_array_equal(got[:n],
+                                      np.asarray(getattr(direct, field)))
+        np.testing.assert_array_equal(got[n:], -1)
+    assert res.stats.as_dict() == direct.stats.as_dict()
+
+
+def test_assign_padded_full_batch_is_identity(engines, points_small):
+    eng = engines["fast_fused"]
+    xy, *_ = points_small
+    direct = eng.assign(jnp.asarray(xy))
+    res = eng.assign_padded(jnp.asarray(xy), len(xy))
+    np.testing.assert_array_equal(np.asarray(res.block),
+                                  np.asarray(direct.block))
+    assert res.stats.as_dict() == direct.stats.as_dict()
+
+
+# -- serving bit-identity ----------------------------------------------------
+
+@pytest.mark.parametrize("name", ["simple", "fast_fused", "hybrid"])
+@pytest.mark.parametrize("cache", [False, True])
+def test_server_bit_identical_to_direct_assign(engines, points_small, name,
+                                               cache):
+    """Mixed-size request streams through the server == direct
+    GeoEngine.assign on the same points, cache on and off; a second
+    pass (cache warm) stays identical."""
+    eng = engines[name]
+    xy, *_ = points_small
+    direct = eng.assign(jnp.asarray(xy))
+    server = GeoServer(eng, ServeConfig(buckets=BUCKETS, cache=cache))
+    server.warm()
+    off, outs = _serve_stream(server, xy)
+    for field in ("state", "county", "block"):
+        got = np.concatenate([np.asarray(getattr(r, field)) for r in outs])
+        np.testing.assert_array_equal(
+            got, np.asarray(getattr(direct, field))[:off], err_msg=name)
+    res2 = server.submit(xy[:off])
+    np.testing.assert_array_equal(res2.block,
+                                  np.asarray(direct.block)[:off])
+    if cache:
+        snap = server.cache_snapshot()
+        assert snap["hits"] > 0
+        assert snap["hit_rate"] > 0
+
+
+def test_server_preserves_partial_assignments(engines, synth_small):
+    """The simple cascade can resolve a point's state yet lose it at the
+    county/block level (bbox gaps on uniform traffic); serving must
+    return that partial answer bit-identically — state/county come from
+    the engine for miss rows, never a re-derivation from block == -1."""
+    x0, x1, y0, y1 = synth_small.census.extent
+    rng = np.random.default_rng(9)
+    pts = np.stack([rng.uniform(x0, x1, 3000),
+                    rng.uniform(y0, y1, 3000)], -1).astype(np.float32)
+    eng = engines["simple"]
+    direct = eng.assign(jnp.asarray(pts))
+    partial = ((np.asarray(direct.state) >= 0)
+               & (np.asarray(direct.block) < 0))
+    assert partial.any()            # the scenario exists on this traffic
+    for cache in (False, True):
+        server = GeoServer(eng, ServeConfig(buckets=BUCKETS, cache=cache))
+        res = server.submit(pts)
+        for field in ("state", "county", "block"):
+            np.testing.assert_array_equal(
+                getattr(res, field),
+                np.asarray(getattr(direct, field)), err_msg=field)
+
+
+def test_flush_requeues_unserved_work_on_engine_error(engines,
+                                                      points_small,
+                                                      monkeypatch):
+    """A flush that dies mid-serve must not lose drained requests: the
+    failed batch requeues, the exception propagates, and a later flush
+    serves everything."""
+    xy, *_ = points_small
+    eng = engines["fast_fused"]
+    server = GeoServer(eng, ServeConfig(buckets=BUCKETS, cache=False))
+    ticket = server.enqueue(xy[:100])
+    monkeypatch.setattr(
+        eng, "assign_padded",
+        lambda points, n_valid: (_ for _ in ()).throw(
+            RuntimeError("device lost")))
+    with pytest.raises(RuntimeError, match="device lost"):
+        server.flush()
+    assert not ticket.done
+    assert server.batcher.queued_points == 100
+    assert server.snapshot()["counters"]["failed_flushes"] == 1
+    monkeypatch.undo()
+    server.flush()
+    assert ticket.done
+    np.testing.assert_array_equal(
+        ticket.result().block,
+        np.asarray(eng.assign(jnp.asarray(xy[:100])).block))
+
+
+def test_server_stats_merge_across_microbatches(engines, points_small):
+    """The server's running GeoStats (merged per micro-batch) totals the
+    same counters as one direct assign over the served points."""
+    eng = engines["fast_fused"]
+    xy, *_ = points_small
+    server = GeoServer(eng, ServeConfig(buckets=BUCKETS, cache=False))
+    off, _ = _serve_stream(server, xy)
+    merged = server.stats[0].as_dict()
+    direct = eng.assign(jnp.asarray(xy[:off])).stats.as_dict()
+    # Micro-batching changes how work is batched, not how much: the
+    # boundary count is batching-invariant (and with full caps so is
+    # everything that feeds it).
+    assert merged["n_boundary"] == direct["n_boundary"]
+    assert merged["overflow"] == direct["overflow"] == 0
+    assert merged["phase2_miss"] == direct["phase2_miss"]
+
+
+def test_resolve_stats_merge_counters():
+    """ResolveStats.merge sums every counter (the micro-batch
+    aggregation contract, same as GeoStats.merge above)."""
+    a = ResolveStats(n_need=1, n_pip=2, overflow=3, phase2_miss=4)
+    b = ResolveStats(n_need=10, n_pip=20, overflow=30, phase2_miss=40)
+    assert a.merge(b).as_dict() == {"n_need": 11, "n_pip": 22,
+                                    "overflow": 33, "phase2_miss": 44}
+
+
+# -- hot-cell cache ----------------------------------------------------------
+
+def test_cache_learns_only_interior_cells(engines, points_small):
+    xy, *_ = points_small
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=True))
+    server.submit(xy[:1000])
+    cache = server.regions[0].cache
+    assert len(cache) > 0
+    codes = np.fromiter(cache._map.keys(), np.int64)
+    vals = np.fromiter(cache._map.values(), np.int64)
+    safe = cache.table.interior_value(codes.astype(np.int32))
+    np.testing.assert_array_equal(safe, vals)     # all interior, all exact
+    assert np.all(vals >= 0)
+
+
+def test_cache_eviction_bounds_entries(engines, points_small):
+    xy, *_ = points_small
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=True,
+                                   cache_capacity=8))
+    server.submit(xy[:1000])
+    cache = server.regions[0].cache
+    assert len(cache) <= 8
+    assert cache.evictions > 0
+    snap = server.snapshot()
+    assert snap["counters"]["cache_evictions"] == cache.evictions
+
+
+def test_off_extent_points_not_cached_and_serve_minus_one(engines,
+                                                          synth_small):
+    x0, x1, y0, y1 = synth_small.census.extent
+    w, h = x1 - x0, y1 - y0
+    far = np.array([[x1 + w, (y0 + y1) / 2], [x0 - 2 * w, y0 - h]],
+                   np.float32)
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=True))
+    for _ in range(2):                            # second pass: still miss
+        res = server.submit(far)
+        np.testing.assert_array_equal(res.block, -1)
+        np.testing.assert_array_equal(res.state, -1)
+        # region == -1 means "in no region's extent" for single-region
+        # servers too (uniform ServeResult contract).
+        np.testing.assert_array_equal(res.region, -1)
+    assert len(server.regions[0].cache) == 0
+    assert server.cache_snapshot()["hits"] == 0
+
+
+# -- backpressure ------------------------------------------------------------
+
+def test_backpressure_shed_raises_queue_full(engines, points_small):
+    xy, *_ = points_small
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, max_queue_points=100,
+                                   policy="shed", cache=False))
+    server.enqueue(xy[:80])
+    with pytest.raises(QueueFull):
+        server.enqueue(xy[80:160])
+    assert server.snapshot()["counters"]["shed_requests"] == 1
+    server.flush()                                # first request survives
+    res = server.submit(xy[:10])                  # and serving continues
+    assert len(res.block) == 10
+
+
+def test_backpressure_block_flushes_inline(engines, points_small):
+    xy, *_ = points_small
+    eng = engines["fast_fused"]
+    server = GeoServer(eng, ServeConfig(buckets=BUCKETS,
+                                        max_queue_points=100,
+                                        policy="block", cache=False))
+    t1 = server.enqueue(xy[:80])
+    t2 = server.enqueue(xy[80:160])               # overflow -> inline flush
+    assert t1.done                                # first batch was served
+    server.flush()
+    direct = np.asarray(eng.assign(jnp.asarray(xy[:160])).block)
+    np.testing.assert_array_equal(
+        np.concatenate([t1.result().block, t2.result().block]), direct)
+
+
+# -- metrics -----------------------------------------------------------------
+
+def test_metrics_snapshot_schema_and_json(engines, points_small):
+    xy, *_ = points_small
+    server = GeoServer(engines["hybrid"],
+                       ServeConfig(buckets=BUCKETS, cache=True))
+    server.warm()
+    _serve_stream(server, xy)
+    # The bare registry is already fresh after a flush (cache counters
+    # are pushed, not pulled) — metrics.to_json() alone must be accurate.
+    raw = server.metrics.snapshot()
+    assert raw["counters"]["cache_misses"] > 0
+    snap = server.snapshot()
+    c, d = snap["counters"], snap["derived"]
+    assert c["requests"] == len(STREAM)
+    assert c["points_in"] == c["points_served"] == sum(STREAM)
+    for key in ("geo_phase2_miss", "geo_overflow", "geo_n_boundary",
+                "geo_n_pip", "cache_hits", "cache_misses", "batches",
+                "padded_slots", "valid_slots"):
+        assert key in c, key
+    for key in ("cache_hit_rate", "batch_fill_ratio", "boundary_fraction",
+                "pip_per_point"):
+        assert key in d, key
+    assert 0 < d["batch_fill_ratio"] <= 1
+    lat = snap["latency_ms"]
+    assert lat["count"] == len(STREAM)
+    assert 0 <= lat["p50"] <= lat["p99"] <= lat["max"]
+    assert snap["gauges"]["queue_depth_points"] == 0
+    json.loads(server.metrics.to_json())          # JSON-renderable
+
+
+def test_warm_compiles_every_bucket(engines):
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    times = server.warm()
+    assert set(times) == set(BUCKETS)
+    assert all(t >= 0 for t in times.values())
+
+
+def test_empty_flush_and_empty_request(engines):
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    assert server.flush() == 0                    # empty queue: no-op
+    res = server.submit(np.empty((0, 2), np.float32))
+    assert res.block.shape == (0,)
+    assert res.latency_s == 0.0
+    assert server.flush() == 0
+
+
+# -- multi-region routing ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def two_regions():
+    """Two regional censuses with extents sharing the x = -100 border."""
+    scA = build_synth_census(seed=3, n_states=2, counties_per_state=2,
+                             blocks_per_county=4,
+                             extent=(-120.0, -100.0, 30.0, 45.0))
+    scB = build_synth_census(seed=4, n_states=2, counties_per_state=2,
+                             blocks_per_county=4,
+                             extent=(-100.0, -80.0, 30.0, 45.0))
+    cfg = EngineConfig(backend="ref", cap_boundary=1.0, max_level=8)
+    return (scA, GeoEngine.build(scA.census, "fast", cfg),
+            scB, GeoEngine.build(scB.census, "fast", cfg))
+
+
+def test_router_merges_regions_in_input_order(two_regions):
+    scA, engA, scB, engB = two_regions
+    server = GeoServer([engA, engB],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    xyA, bidA, *_ = scA.sample_points(np.random.default_rng(1), 100)
+    xyB, bidB, *_ = scB.sample_points(np.random.default_rng(2), 100)
+    inter = np.empty((200, 2), np.float32)        # interleave A/B points
+    inter[0::2], inter[1::2] = xyA, xyB
+    res = server.submit(inter)
+    np.testing.assert_array_equal(res.region[0::2], 0)
+    np.testing.assert_array_equal(res.region[1::2], 1)
+    np.testing.assert_array_equal(
+        res.block[0::2], np.asarray(engA.assign(jnp.asarray(xyA)).block))
+    np.testing.assert_array_equal(
+        res.block[1::2], np.asarray(engB.assign(jnp.asarray(xyB)).block))
+
+
+def test_router_point_in_no_region_is_minus_one(two_regions):
+    _, engA, _, engB = two_regions
+    server = GeoServer([engA, engB],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    nowhere = np.array([[-150.0, 37.0], [0.0, 0.0], [-90.0, 70.0]],
+                       np.float32)
+    res = server.submit(nowhere)
+    np.testing.assert_array_equal(res.block, -1)
+    np.testing.assert_array_equal(res.state, -1)
+    np.testing.assert_array_equal(res.region, -1)
+
+
+def test_router_shared_border_deterministic_single_owner(two_regions):
+    """A point on the shared extent border gets exactly one owner, the
+    same one on every submit, and the result equals that region's own
+    direct assign."""
+    _, engA, _, engB = two_regions
+    server = GeoServer([engA, engB],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    border = np.array([[-100.0, 37.5], [-100.0, 33.0]], np.float32)
+    first = server.submit(border)
+    assert np.all(first.region >= 0)              # someone owns it
+    assert len(np.unique(first.region)) == 1      # exactly one region
+    for _ in range(3):
+        again = server.submit(border)
+        np.testing.assert_array_equal(again.region, first.region)
+        np.testing.assert_array_equal(again.block, first.block)
+    owner = [engA, engB][int(first.region[0])]
+    np.testing.assert_array_equal(
+        first.block, np.asarray(owner.assign(jnp.asarray(border)).block))
+
+
+def test_router_overlapping_extents_first_region_wins(two_regions):
+    """With overlapping extents the list order is the deterministic
+    tiebreak: region 0 owns the overlap."""
+    scA, engA, scB, engB = two_regions
+    xyA, *_ = scA.sample_points(np.random.default_rng(5), 50)
+    server = GeoServer([engA, engA],              # total overlap
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    res = server.submit(xyA)
+    np.testing.assert_array_equal(res.region, 0)
+
+
+def test_router_empty_flush_multi_region(two_regions):
+    _, engA, _, engB = two_regions
+    server = GeoServer([engA, engB],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    assert server.flush() == 0
+    res = server.submit(np.empty((0, 2), np.float32))
+    assert res.block.shape == (0,)
