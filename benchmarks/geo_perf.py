@@ -53,6 +53,10 @@ def bench_strategies(census, cov, pts, bid, repeats=5):
                                                   fused=True)),
         "fast_approx": ("fast", EngineConfig(mode="approx")),
         "hybrid": ("hybrid", EngineConfig()),
+        # The planner's pick for this device/map/batch — its row records
+        # the chosen GeoPlan, so the bench history shows when the auto
+        # heuristics and the measured winner disagree.
+        "auto": ("auto", EngineConfig()),
     }
     for name, (strategy, cfg) in specs.items():
         eng = GeoEngine.build(census, strategy, cfg, covering=cov)
@@ -70,12 +74,16 @@ def bench_strategies(census, cov, pts, bid, repeats=5):
         # catches silent degradation — a capacity squeeze or a phase-2
         # miss creep shows up even when points/sec holds steady.
         stats = res.stats.as_dict()
+        # Every row records the engine's plan (strategy/mode/fused +
+        # reasons; the planner's own choice for the "auto" row) so bench
+        # history ties numbers to the execution plan that produced them.
         results[name] = {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
-                         "accuracy": acc, **stats}
+                         "accuracy": acc, "plan": eng.explain(), **stats}
+        tag = f" -> {eng.strategy}" if strategy == "auto" else ""
         print(f"{name:16s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
               f"acc {acc:.4f} | boundary {stats['n_boundary']} "
               f"pip {stats['n_pip']} overflow {stats['overflow']} "
-              f"p2miss {stats['phase2_miss']}")
+              f"p2miss {stats['phase2_miss']}{tag}")
     return results
 
 

@@ -38,6 +38,9 @@ SPECS = {
     "serve_hybrid": ("hybrid", EngineConfig()),
     "serve_fast_exact_fused": ("fast", EngineConfig(mode="exact",
                                                     fused=True)),
+    # Planner-chosen engine behind the same serving stack; its row
+    # records the GeoPlan so serve history ties latency to the plan.
+    "serve_auto": ("auto", EngineConfig()),
 }
 
 
@@ -85,6 +88,7 @@ def bench_serving(census, cov, requests, truths, buckets):
         results[name] = {
             "pts_per_sec": n / wall, "wall_ms": wall * 1e3,
             "n_requests": len(requests), "accuracy": acc,
+            "plan": engine.explain(),
             "p50_ms": lat["p50"], "p99_ms": lat["p99"],
             "cache_hit_rate": d["cache_hit_rate"],
             "batch_fill_ratio": d["batch_fill_ratio"],

@@ -57,6 +57,18 @@ def main():
               f" {int(res.stats.n_pip)/len(xy):.3f} PIP evals/pt,"
               f" overflow {int(res.stats.overflow)}")
 
+    # 4. Or skip the choice entirely: strategy="auto" asks the planner
+    #    (device kind, measured boundary fraction, index capabilities)
+    #    and explain() says what it chose and why.
+    engine = GeoEngine.build(census, "auto", covering=covering)
+    plan = engine.explain()
+    res, dt = timed_assign(engine, pts)
+    acc = float(np.mean(np.asarray(res.block) == bid))
+    print(f"auto -> {plan['strategy']:7s}: {len(xy)/dt/1e6:5.2f}M pts/s, "
+          f"accuracy {acc:.4f}")
+    for reason in plan["reasons"]:
+        print(f"  because: {reason}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,10 +1,11 @@
 """Serving quickstart: GeoServer over a synthetic census — micro-batched
-mixed-size requests, hot-cell caching, live metrics, and a two-region
-router (DESIGN.md §10).
+mixed-size requests, hot-cell caching, deadline flushes, live metrics,
+artifact cold start, and a two-region router (DESIGN.md §10, §11).
 
     PYTHONPATH=src python examples/serve_geo.py
 """
 import json
+import tempfile
 
 import numpy as np
 
@@ -14,14 +15,17 @@ from repro.serving import GeoServer, ServeConfig
 
 
 def main():
-    # 1. Build a census and a serving engine (any strategy works; hybrid
-    #    balances boundary accuracy against candidate-PIP volume).
+    # 1. Build a census and a serving engine.  strategy="auto" lets the
+    #    planner pick; max_delay_ms bounds how long a trickle request can
+    #    sit in the queue before a flush fires (latency SLO).
     print("building synthetic census...")
     sc = build_synth_census(seed=0, n_states=16, counties_per_state=8,
                             blocks_per_county=24)
-    engine = GeoEngine.build(sc.census, "hybrid",
+    engine = GeoEngine.build(sc.census, "auto",
                              EngineConfig(cap_boundary=0.5))
-    server = GeoServer(engine, ServeConfig(buckets=(256, 1024, 4096)))
+    print(f"planner chose {engine.explain()['strategy']!r}")
+    server = GeoServer(engine, ServeConfig(buckets=(256, 1024, 4096),
+                                           max_delay_ms=50.0))
 
     # 2. Warm: pre-pay every bucket's JIT before traffic arrives.
     print("warming buckets:", {b: f"{t:.2f}s"
@@ -48,10 +52,26 @@ def main():
     print(f"served {served} points; batch-stream accuracy "
           f"{correct / off:.4f}")
 
-    # 4. The live metrics snapshot (what a /metrics endpoint would serve).
+    # 4. The live metrics snapshot (what a /metrics endpoint would serve;
+    #    deadline_flushes appears once max_delay_ms ever fires).
     print(json.dumps(server.snapshot(), indent=2, sort_keys=True))
 
-    # 5. Multi-region routing: two regional engines behind one submit().
+    # 5. Cold start: persist the index artifact once, then bring up a
+    #    fresh server from disk — no covering BFS on the restart path.
+    # The artifact stores geometry, not engine knobs: pass the same
+    # EngineConfig (capacity fractions etc.) for bit-identical serving.
+    with tempfile.TemporaryDirectory() as tmp:
+        engine.indices.save(tmp)
+        cold = GeoServer.from_artifact(tmp, strategy="auto",
+                                       engine_cfg=engine.cfg,
+                                       cfg=ServeConfig(buckets=(256,
+                                                                1024)))
+        probe = xy[:512]
+        same = np.array_equal(cold.submit(probe).block,
+                              server.submit(probe).block)
+        print(f"cold-started server from artifact: bit-identical={same}")
+
+    # 6. Multi-region routing: two regional engines behind one submit().
     scW = build_synth_census(seed=3, n_states=4, counties_per_state=4,
                              blocks_per_county=8,
                              extent=(-120.0, -100.0, 30.0, 45.0))

@@ -1,0 +1,43 @@
+"""Index-artifact save/load smoke for scripts/verify.sh: build a small
+GeoIndexSet, round-trip it through disk, and insist the reloaded engine
+assigns bit-identically.  Fast (<~30 s on CPU) — this guards the serving
+cold-start path on every verify, not just when test_plan.py runs.
+"""
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.artifact import GeoIndexSet
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.core.synth import build_synth_census
+
+
+def main() -> int:
+    sc = build_synth_census(seed=2, n_states=4, counties_per_state=3,
+                            blocks_per_county=8)
+    cfg = EngineConfig(backend="ref", max_level=6, fused=True)
+    idx = GeoIndexSet.build(sc.census, components=("simple", "fast"),
+                            pools=("simple", "fast"),
+                            max_level=cfg.max_level)
+    xy, bid, *_ = sc.sample_points(np.random.default_rng(2), 2048)
+    pts = jnp.asarray(xy)
+    with tempfile.TemporaryDirectory() as tmp:
+        idx.save(tmp)
+        loaded = GeoIndexSet.load(tmp)
+        for strategy in ("simple", "fast", "hybrid"):
+            a = GeoEngine.from_index_set(idx, strategy, cfg).assign(pts)
+            b = GeoEngine.from_index_set(loaded, strategy, cfg).assign(pts)
+            if not np.array_equal(np.asarray(a.block),
+                                  np.asarray(b.block)):
+                print(f"artifact smoke FAILED: {strategy} diverged "
+                      f"after reload")
+                return 1
+    print("artifact smoke OK: save/load round trip bit-identical "
+          "(simple, fast-fused, hybrid)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+"""Compare a pytest run's summary line against the recorded tier-1
+baseline (scripts/tier1_baseline.json) and print the delta.
+
+    python scripts/check_tier1.py <pytest-output-file>
+
+Exit status: 0 when the failed count is at or below the baseline's,
+1 on a regression (more failures than recorded) or an unparseable run
+(a collection error must read as a regression, not a pass).  Improving
+runs print a reminder to re-record the baseline.
+"""
+import json
+import os
+import re
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "tier1_baseline.json")
+
+
+def parse_counts(text: str) -> dict:
+    """Counts from pytest's final summary line, e.g.
+    '27 failed, 123 passed, 2 skipped in 195.09s'."""
+    counts = {"failed": 0, "passed": 0, "skipped": 0, "error": 0}
+    found = False
+    for kind in counts:
+        m = re.findall(rf"(\d+) {kind}", text)
+        if m:
+            counts[kind] = int(m[-1])
+            found = True
+    if not found:
+        raise ValueError("no pytest summary line found")
+    return counts
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 1
+    with open(BASELINE) as f:
+        base = json.load(f)
+    try:
+        with open(sys.argv[1], errors="replace") as f:
+            counts = parse_counts(f.read())
+    except (OSError, ValueError) as e:
+        print(f"tier-1 gate: cannot read run summary ({e}) — treating "
+              f"as a regression")
+        return 1
+    failed = counts["failed"] + counts["error"]
+    d_fail = failed - base["failed"]
+    d_pass = counts["passed"] - base["passed"]
+    print(f"tier-1 vs baseline ({base['recorded']}): "
+          f"{failed} failed ({d_fail:+d}), "
+          f"{counts['passed']} passed ({d_pass:+d}), "
+          f"{counts['skipped']} skipped")
+    if d_fail > 0:
+        print(f"tier-1 REGRESSION: {d_fail} more failing test(s) than "
+              f"the recorded baseline ({base['failed']})")
+        return 1
+    if d_pass < 0:
+        # Fewer passing tests with no new failures means tests stopped
+        # RUNNING (skipped out, deselected, deleted) — that hides
+        # regressions rather than fixing them, so it gates too.
+        print(f"tier-1 REGRESSION: {-d_pass} previously-passing test(s) "
+              f"no longer run (baseline {base['passed']} passed)")
+        return 1
+    if d_fail < 0:
+        print("tier-1 improved — consider re-recording "
+              "scripts/tier1_baseline.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,22 +1,39 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the exact command the roadmap pins (ROADMAP.md), then
-# smoke-sized benchmark runs so every verify appends rows to
-# results/BENCH_geo.json (the bench trajectory accumulates with the test
-# history): benchmarks/geo_perf (batch strategies) and
-# benchmarks/serve_perf (the GeoServer serving path — serve_* rows).
-# The smoke benches run even when pytest fails (known-failing model-stack
-# tests must not starve the bench record).  Exit status: pytest's failure
-# wins; a bench failure surfaces only when pytest passed.
+# Tier-1 verify with a baseline gate, then smoke-sized benchmark +
+# artifact runs so every verify appends rows to results/BENCH_geo.json
+# (the bench trajectory accumulates with the test history):
+#
+#   1. full pytest run (no -x: the baseline gate needs complete counts);
+#   2. scripts/check_tier1.py prints the pass/fail delta vs the recorded
+#      seed baseline (scripts/tier1_baseline.json) and fails the verify
+#      on any regression — pytest's raw exit status is informational
+#      (the baseline's known model-stack failures are expected);
+#   3. benchmarks/geo_perf --smoke and benchmarks/serve_perf --smoke
+#      (run even on test failure: known-failing model-stack tests must
+#      not starve the bench record);
+#   4. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
+#      (the serving cold-start path) checked bit-identical.
+#
+# Exit status: the baseline gate's verdict wins; bench/smoke failures
+# surface only when the gate passed.
 # Usage: scripts/verify.sh [extra pytest args]
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
-python -m pytest -x -q "$@"
+
+pytest_log=$(mktemp)
+trap 'rm -f "$pytest_log"' EXIT
+python -m pytest -q "$@" 2>&1 | tee "$pytest_log"
+python scripts/check_tier1.py "$pytest_log"
 status=$?
+
 python -m benchmarks.geo_perf --smoke
 bench=$?
 python -m benchmarks.serve_perf --smoke
 serve_bench=$?
+python scripts/artifact_smoke.py
+smoke=$?
 [ "$bench" -eq 0 ] && bench=$serve_bench
+[ "$bench" -eq 0 ] && bench=$smoke
 [ "$status" -eq 0 ] && status=$bench
 exit $status

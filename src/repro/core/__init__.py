@@ -2,10 +2,14 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 #
-# Layering (DESIGN.md §3):
+# Layering (DESIGN.md §3, §11):
 #   geometry/synth/cells  — host-side map + index construction
 #   compact/resolve       — the shared device-side resolution core
 #   simple/fast           — the paper's two strategies as thin drivers
-#   engine                — the GeoEngine facade (simple|fast|hybrid,
-#                           single-mesh and dispatch-routed sharded assign)
+#   registry/strategies   — Strategy protocol + the registered plugins
+#                           (simple | fast | hybrid | sharded)
+#   artifact              — GeoIndexSet: unified indices + edge pools,
+#                           versioned save/load (cold start)
+#   plan                  — the auto-planner behind strategy="auto"
+#   engine                — the plan-and-execute GeoEngine facade
 #   distributed/enrich    — sharded lookup internals, pipeline operator

@@ -174,6 +174,9 @@ def assign_fast_distributed(idx: ShardedFastIndex, points: jnp.ndarray,
     n = points.shape[0]
     n_loc = n // dp_size
     cap = capacity_for(n_loc, cfg.cap_boundary)
+    # Defense in depth for direct callers — engine-routed sharded assign
+    # builds the pool on demand (GeoIndexSet.sharded_index) and never
+    # reaches this raise.
     if cfg.fused and cfg.mode == "exact" and idx.edge_pool is None:
         raise ValueError("FastConfig.fused needs an index built with "
                          "with_pool=True (shard_covering)")

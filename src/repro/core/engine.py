@@ -1,71 +1,76 @@
-"""GeoEngine: one facade over every mapping strategy (DESIGN.md §3).
+"""GeoEngine: plan-and-execute facade over registered mapping strategies
+(DESIGN.md §3, §11).
 
-``GeoEngine.build(census, strategy=..., cfg=...)`` constructs whatever
-indices the strategy needs and exposes two entry points:
+The engine composes three replaceable layers:
 
-  * ``engine.assign(points)``            — single-mesh lookup;
-  * ``engine.assign_sharded(points, mesh)`` — the cell table Morton-sharded
-    over the mesh's "model" axis, with points *routed to their owning
-    shard* through the capacity-bucketed dispatch primitive shared with the
-    MoE layer (distributed/dispatch.py) — each shard then resolves only the
-    points it owns instead of scanning the full batch.
+  * a **strategy registry** (core/registry.py + core/strategies.py):
+    simple | fast | hybrid | sharded ship as registered plugins over the
+    shared resolution core, and third-party strategies register without
+    touching engine code;
+  * a **unified index artifact** (core/artifact.py): one ``GeoIndexSet``
+    owns every index + edge pool a strategy can need, builds components
+    lazily from declared capability flags, and persists to disk
+    (versioned npz + manifest) so services cold-start without re-running
+    the covering BFS;
+  * an **auto-planner** (core/plan.py): ``build(census, strategy="auto")``
+    inspects device kind, batch-size hints, index capabilities, and the
+    measured boundary fraction to choose an explainable ``GeoPlan`` —
+    ``engine.explain()`` says what was chosen and why.
 
-Strategies:
+Entry points:
 
-  * ``simple`` — the paper's §III hierarchical bbox cascade.
-  * ``fast``   — the paper's §IV true-hit-filter cell index
-                 (cfg.mode picks exact / approx boundary handling).
-  * ``hybrid`` — NEW: fast cell lookup for interior "true hits" (zero PIP
-    tests, identical to fast), but boundary/overflow points are routed
-    through the simple cascade's hierarchical PIP instead of the flat
-    candidate-list fallback; only points the cascade cannot place (bbox
-    grazing, capacity overflow) degrade to the centre-owner candidate.
-    Strictly better accuracy than ``fast(approx)`` at a fraction of
-    ``fast(exact)``'s candidate-PIP volume when boundary traffic is heavy.
-
-All strategies bottom out in core/resolve.py — the engine adds no PIP or
-compaction logic of its own, it only composes the drivers.
+  * ``engine.assign(points)``               — single-mesh lookup;
+  * ``engine.assign_padded(points, n)``     — shape-stable serving batches;
+  * ``engine.assign_sharded(points, mesh)`` — the cell table Morton-
+    sharded over the mesh's "model" axis via the registered "sharded"
+    plugin (points routed to their owning shard through the MoE dispatch
+    primitive, distributed/dispatch.py).
 
 Typical use::
 
-    eng = GeoEngine.build(census, strategy="fast",
-                          cfg=EngineConfig(mode="exact", fused=True))
+    eng = GeoEngine.build(census, strategy="auto")
+    eng.explain()                     # {"strategy": ..., "reasons": [...]}
     res = eng.assign(points)          # AssignResult
     res.block                         # [N] i32 block ids (-1 = off-map)
-    res.stats.n_pip                   # candidate PIP tests issued
+
+    eng.indices.save("artifacts/map")              # persist the artifact
+    eng2 = GeoEngine.from_index_set(               # cold start
+        GeoIndexSet.load("artifacts/map"), strategy="auto")
+
+The legacy explicit form ``GeoEngine.build(census, strategy="fast",
+cfg=EngineConfig(...))`` keeps working unchanged — it is now a thin
+wrapper that pins the plan instead of asking the planner.
 
 Everything in ``EngineConfig`` is static (part of the jit cache key);
 ``fused=True`` swaps the candidate PIP data path for the fused gather-PIP
 Pallas kernel (kernels/gather_pip.py) in every strategy — results are
-identical, only the memory traffic changes (DESIGN.md §9).
+identical, only the memory traffic changes (DESIGN.md §9).  Capability
+gaps (a fused config over a pool-less index, a missing index) surface as
+ValueError at *construction*, never at the first assign.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
+from repro.core import strategies as _strategies  # noqa: F401  (registers
+#                                                  the built-in plugins)
+from repro.core.artifact import GeoIndexSet
 from repro.core import fast as fast_mod
-from repro.core import simple as simple_mod
-from repro.core.cells import build_cell_covering
-from repro.core.compact import (capacity_for, compact_indices,
-                                scatter_filled)
-from repro.core.distributed import (ShardedFastIndex, local_lookup,
-                                    shard_covering)
-from repro.core.fast import (FastConfig, FastIndex, cell_values, parents_of,
-                             quantize_codes)
 from repro.core.geometry import CensusMap
-from repro.core.resolve import AssignResult, GeoStats
-from repro.core.simple import SimpleConfig, SimpleIndex
-from repro.distributed.dispatch import (plan_routes, scatter_to_buckets,
-                                        slot_tables)
+from repro.core.registry import available_strategies, get_strategy
+from repro.core.resolve import AssignResult
+from repro.core.simple import SimpleConfig
+from repro.core.fast import FastConfig
 from repro.kernels import ops
-from repro.launch.mesh import shard_map
 
+# Names an explicit ``GeoEngine.build(strategy=...)`` accepts (the
+# registry may hold more — anything registered works through the
+# constructor; "auto" additionally asks the planner).
 STRATEGIES = ("simple", "fast", "hybrid")
 
 
@@ -111,149 +116,124 @@ class EngineConfig:
                             backend=self.backend, fused=self.fused)
 
 
-@functools.partial(jax.jit, static_argnames=("scfg", "cap_frac"))
-def _assign_hybrid(findex: FastIndex, sindex: SimpleIndex,
-                   points: jnp.ndarray, scfg: SimpleConfig,
-                   cap_frac: float):
-    """Hybrid strategy: interior true hits from the cell index; boundary
-    points re-resolved through the hierarchical cascade."""
-    n = points.shape[0]
-    val = cell_values(findex, points)
-    bid = jnp.where(val >= 0, val, -1)
-    need = (val < 0) & (val > fast_mod.OUTSIDE)      # boundary cells
-    n_boundary = jnp.sum(need.astype(jnp.int32))
-
-    cap = capacity_for(n, cap_frac)
-    idx, slot_ok = compact_indices(need, cap)
-    sub_need = need[idx] & slot_ok
-    # Unfilled compaction slots alias row 0; feed the cascade FAR points
-    # there (and on non-boundary rows) so its stats count only real
-    # boundary work — otherwise n_pip would scale with the capacity, and
-    # a padded batch (assign_padded) would report different stats than
-    # the unpadded call.  Result-identical: only sub_need rows' cascade
-    # output is kept below.
-    sub_pts = jnp.where(sub_need[:, None], points[idx],
-                        jnp.float32(ops.FAR))
-    _, _, sub_bid, sub_stats = simple_mod.cascade_assign(
-        sindex, sub_pts, scfg)
-    bid = scatter_filled(bid, idx, slot_ok,
-                         jnp.where(sub_need & (sub_bid >= 0),
-                                   sub_bid, bid[idx]))
-    overflow = n_boundary - jnp.sum(sub_need.astype(jnp.int32))
-    if findex.cand.shape[0] > 0:
-        # Cascade misses + capacity overflow degrade to the centre-owner
-        # candidate (the fast-approx answer) rather than staying lost.
-        brow = jnp.clip(-(val + 1), 0, findex.cand.shape[0] - 1)
-        bid = jnp.where(need & (bid < 0), findex.cand[brow, 0], bid)
-
-    cid, sid = parents_of(findex, bid)
-    n_pip = sum(lvl["n_pip"] for lvl in sub_stats.values())
-    stats = {"n_boundary": n_boundary, "n_pip": n_pip,
-             "overflow": overflow, "cascade": sub_stats}
-    return sid, cid, bid, stats
-
-
-def _sharded_assign(sidx: ShardedFastIndex, points: jnp.ndarray, mesh,
-                    cfg: FastConfig, capacity: int, cap_pip: int):
-    """Dispatch-routed sharded lookup: bucket points by owning Morton
-    shard, scatter into per-shard capacity buffers, look up shard-locally
-    under shard_map, gather results back by buffer slot."""
-    n = points.shape[0]
-    s = sidx.n_shards
-    codes = quantize_codes(sidx.quant, sidx.max_level, points)
-    owner = jnp.clip(
-        jnp.searchsorted(sidx.range_lo, codes, side="right") - 1, 0, s - 1
-    ).astype(jnp.int32)
-    plan = plan_routes(owner, s, capacity)
-    item_for_slot, _ = slot_tables(plan, s, capacity)        # [S*cap]
-    ok = item_for_slot >= 0
-    # Off-extent points carry border-clipped codes (see quantize_codes);
-    # deactivate their slots so they come back -1, not a border block.
-    ext = fast_mod.extent_mask(sidx.quant, sidx.max_level, points)
-    slot_ext = ok & ext[jnp.clip(item_for_slot, 0, n - 1)]
-    buf_pts = scatter_to_buckets(plan, points, s, capacity,
-                                 item_for_slot=item_for_slot
-                                 ).reshape(s, capacity, 2)
-    buf_ok = slot_ext.reshape(s, capacity)
-    pool = sidx.edge_pool if cfg.fused else None
-
-    def body(pts_loc, ok_loc, lo, hi, val, cand):
-        pts_loc, ok_loc = pts_loc[0], ok_loc[0]
-        lo, hi, val, cand = lo[0], hi[0], val[0], cand[0]
-        codes_loc = quantize_codes(sidx.quant, sidx.max_level, pts_loc)
-        bid, rs = local_lookup(
-            sidx.block_edges, lo, hi, val, cand, codes_loc, pts_loc,
-            cfg.mode, cap_pip, cfg.backend, active=ok_loc,
-            edge_pool=pool)
-        return (bid[None], jax.lax.psum(rs.n_need, "model"),
-                jax.lax.psum(rs.n_pip, "model"),
-                jax.lax.psum(rs.overflow, "model"),
-                jax.lax.psum(rs.phase2_miss, "model"))
-
-    ps = jax.sharding.PartitionSpec
-    bid_buf, n_need, n_pip, pip_of, p2_miss = shard_map(
-        body, mesh=mesh,
-        in_specs=(ps("model"), ps("model"), ps("model"), ps("model"),
-                  ps("model"), ps("model")),
-        out_specs=(ps("model"), ps(), ps(), ps(), ps()),
-    )(buf_pts, buf_ok, sidx.cell_lo, sidx.cell_hi, sidx.cell_val,
-      sidx.cand)
-
-    dest = jnp.where(ok, item_for_slot, n)
-    bid = jnp.full((n + 1,), -1, jnp.int32).at[dest].set(
-        bid_buf.reshape(-1), mode="drop")[:n]
-    cid, sid = parents_of(sidx, bid)
-    stats = {"n_boundary": n_need, "n_pip": n_pip, "overflow": pip_of,
-             "phase2_miss": p2_miss, "n_dropped": plan.n_dropped}
-    return sid, cid, bid, stats
-
-
 class GeoEngine:
-    """Facade: build once, assign many (see module docstring)."""
+    """Facade: plan once, build once, assign many (see module docstring)."""
 
     def __init__(self, strategy: str, cfg: Optional[EngineConfig] = None, *,
-                 simple_index: Optional[SimpleIndex] = None,
-                 fast_index: Optional[FastIndex] = None,
-                 covering=None, census: Optional[CensusMap] = None):
-        if strategy not in STRATEGIES:
-            raise ValueError(f"unknown strategy {strategy!r}; "
-                             f"expected one of {STRATEGIES}")
-        self.strategy = strategy
+                 indices: Optional[GeoIndexSet] = None,
+                 simple_index=None, fast_index=None,
+                 covering=None, census: Optional[CensusMap] = None,
+                 plan: Optional[plan_mod.GeoPlan] = None):
+        """Wrap already-built indices.  ``indices`` is the unified
+        artifact; the ``simple_index``/``fast_index``/``covering``/
+        ``census`` keywords are the legacy spelling and are folded into
+        one.  Capability validation (missing index, fused without pools)
+        happens HERE — a misconfigured engine never constructs."""
         self.cfg = cfg or EngineConfig()
-        self.simple_index = simple_index
-        self.fast_index = fast_index
-        self.covering = covering
-        self.census = census
-        self._sharded: dict[int, ShardedFastIndex] = {}
-        if strategy in ("simple", "hybrid") and simple_index is None:
-            raise ValueError(f"strategy {strategy!r} needs a simple_index")
-        if strategy in ("fast", "hybrid") and fast_index is None:
-            raise ValueError(f"strategy {strategy!r} needs a fast_index")
+        self._impl = get_strategy(strategy)      # ValueError on unknown
+        self.strategy = strategy
+        if indices is None:
+            indices = GeoIndexSet(census=census, covering=covering,
+                                  simple=simple_index, fast=fast_index,
+                                  max_level=self.cfg.max_level,
+                                  gbits=self.cfg.gbits,
+                                  max_cand=self.cfg.max_cand)
+        self.indices = indices
+        self._impl.validate(indices, self.cfg)
+        self.plan = plan if plan is not None \
+            else plan_mod.explicit_plan(strategy, self.cfg)
 
     @classmethod
     def build(cls, census: CensusMap, strategy: str = "simple",
               cfg: Optional[EngineConfig] = None,
               covering=None) -> "GeoEngine":
-        """Build the indices ``strategy`` needs from a host-side census."""
+        """Build the indices ``strategy`` needs from a host-side census.
+
+        ``strategy="auto"`` asks the planner (core/plan.py): the covering
+        is built first (it is both an index component and the planner's
+        boundary-fraction measurement), a ``GeoPlan`` is chosen, and the
+        engine is built to that plan — ``explain()`` tells you what
+        happened.  Any registered strategy name pins the plan instead.
+        """
         cfg = cfg or EngineConfig()
-        simple_index = fast_index = None
-        if strategy in ("simple", "hybrid"):
-            simple_index = SimpleIndex.from_census(census,
-                                                   with_pools=cfg.fused)
-        if strategy in ("fast", "hybrid"):
-            if covering is None:
-                covering = build_cell_covering(census,
-                                               max_level=cfg.max_level,
-                                               max_cand=cfg.max_cand)
-            # Only fast-exact runs candidate PIP on the fast index (hybrid
-            # resolves boundaries through the cascade, approx never PIPs),
-            # so only it needs the pool; assign_sharded builds its own.
-            fast_index = FastIndex.from_covering(
-                covering, census, gbits=cfg.gbits,
-                with_pool=(cfg.fused and strategy == "fast"
-                           and cfg.mode == "exact"))
-        return cls(strategy, cfg, simple_index=simple_index,
-                   fast_index=fast_index, covering=covering, census=census)
+        indices = GeoIndexSet(census=census, covering=covering,
+                              max_level=cfg.max_level, gbits=cfg.gbits,
+                              max_cand=cfg.max_cand)
+        plan = None
+        if strategy == "auto":
+            indices.ensure("covering")
+            plan = plan_mod.plan_for(cfg, covering=indices.covering)
+            cfg = plan.apply(cfg)
+            strategy = plan.strategy
+        impl = get_strategy(strategy)
+        for comp in impl.required_components(cfg):
+            indices.ensure(comp)
+        for comp in impl.pool_components(cfg):
+            indices.ensure(comp, pool=True)
+        return cls(strategy, cfg, indices=indices, plan=plan)
+
+    @classmethod
+    def from_index_set(cls, indices: GeoIndexSet, strategy: str = "auto",
+                       cfg: Optional[EngineConfig] = None) -> "GeoEngine":
+        """Build over an existing artifact (typically ``GeoIndexSet.load``
+        — the serving cold-start path).  The artifact's build parameters
+        (max_level / gbits / max_cand) override the config's so device
+        components rebuild exactly as saved; ``strategy="auto"`` plans
+        against the artifact's capabilities."""
+        cfg = dataclasses.replace(cfg or EngineConfig(),
+                                  max_level=indices.max_level,
+                                  gbits=indices.gbits,
+                                  max_cand=indices.max_cand)
+        plan = None
+        if strategy == "auto":
+            if indices.census is not None:
+                indices.ensure("covering")
+            plan = plan_mod.plan_for(cfg, covering=indices.covering,
+                                     capabilities=indices.capabilities())
+            cfg = plan.apply(cfg)
+            strategy = plan.strategy
+        impl = get_strategy(strategy)
+        if indices.census is not None:
+            for comp in impl.required_components(cfg):
+                indices.ensure(comp)
+            for comp in impl.pool_components(cfg):
+                indices.ensure(comp, pool=True)
+        return cls(strategy, cfg, indices=indices, plan=plan)
+
+    # -- index views (legacy attribute spelling) ----------------------------
+
+    @property
+    def simple_index(self):
+        return self.indices.simple
+
+    @property
+    def fast_index(self):
+        return self.indices.fast
+
+    @property
+    def covering(self):
+        return self.indices.covering
+
+    @property
+    def census(self):
+        return self.indices.census
+
+    # -- planning introspection ---------------------------------------------
+
+    def explain(self, n_points: Optional[int] = None) -> dict:
+        """The engine's plan as a JSON-ready dict.  With no argument:
+        the plan this engine was built under (the planner's choice for
+        ``"auto"`` builds, the pinned explicit plan otherwise).  With a
+        batch-size hint: what the planner would choose for that batch
+        against this engine's *built* capabilities — e.g. whether a
+        sharded route or a different strategy would win — without
+        touching the engine."""
+        if n_points is None:
+            return self.plan.as_dict()
+        return plan_mod.plan_for(
+            self.cfg, covering=self.indices.covering,
+            capabilities=self.indices.capabilities(),
+            n_points=n_points).as_dict()
 
     # -- single-mesh assign ------------------------------------------------
 
@@ -267,25 +247,7 @@ class GeoEngine:
         breakdown (per-level dicts for simple, ``n_boundary``/
         ``phase2_miss`` for fast/hybrid) rides in ``stats.extra``.
         """
-        if self.strategy == "simple":
-            sid, cid, bid, st = simple_mod.assign_simple(
-                self.simple_index, points, self.cfg.simple_cfg())
-            levels = ("state", "county", "block")
-            return AssignResult(sid, cid, bid, GeoStats(
-                n_need=sum(st[l]["n_multi"] for l in levels),
-                n_pip=sum(st[l]["n_pip"] for l in levels),
-                overflow=sum(st[l]["overflow"] for l in levels),
-                extra=st))
-        if self.strategy == "fast":
-            sid, cid, bid, st = fast_mod.assign_fast(
-                self.fast_index, points, self.cfg.fast_cfg())
-        else:
-            sid, cid, bid, st = _assign_hybrid(
-                self.fast_index, self.simple_index, points,
-                self.cfg.hybrid_cascade_cfg(), self.cfg.cap_boundary)
-        return AssignResult(sid, cid, bid, GeoStats(
-            n_need=st["n_boundary"], n_pip=st["n_pip"],
-            overflow=st["overflow"], extra=st))
+        return self._impl.assign(self.indices, points, self.cfg)
 
     def assign_padded(self, points: jnp.ndarray,
                       n_valid) -> AssignResult:
@@ -304,6 +266,9 @@ class GeoEngine:
         a padded call can only see *less* overflow, never more).  Pad rows
         come back -1 in all three id arrays.
         """
+        if not self._impl.caps.supports_padded:
+            raise ValueError(f"strategy {self.strategy!r} does not "
+                             f"support padded batches")
         b = points.shape[0]
         valid = jnp.arange(b, dtype=jnp.int32) < n_valid
         masked = jnp.where(valid[:, None], points.astype(jnp.float32),
@@ -352,35 +317,15 @@ class GeoEngine:
 
     # -- sharded assign ----------------------------------------------------
 
-    def _sharded_index(self, n_shards: int) -> ShardedFastIndex:
-        if n_shards not in self._sharded:
-            if self.covering is None or self.census is None:
-                raise ValueError("assign_sharded needs the engine built "
-                                 "from a census with a cell covering "
-                                 "(strategy 'fast' or 'hybrid')")
-            self._sharded[n_shards] = shard_covering(
-                self.covering, self.census, n_shards,
-                with_pool=(self.cfg.fused and self.cfg.mode == "exact"))
-        return self._sharded[n_shards]
-
     def assign_sharded(self, points: jnp.ndarray, mesh) -> AssignResult:
-        """Sharded lookup over ``mesh``'s "model" axis (see module doc).
+        """Sharded lookup over ``mesh``'s "model" axis, routed through the
+        registered "sharded" strategy plugin (or the engine's own
+        strategy, if it declares ``supports_sharded``) — see
+        core/strategies.py for capacity and drop accounting."""
+        impl = self._impl if self._impl.caps.supports_sharded \
+            else get_strategy("sharded")
+        return impl.assign_sharded(self.indices, points, mesh, self.cfg)
 
-        Capacity per shard is ``cap_shard * N / n_shards`` — routing skew
-        beyond that is dropped to bid -1 and counted in stats
-        (extra["n_dropped"]), mirroring MoE token dropping.
-        """
-        if "model" not in mesh.axis_names:
-            raise ValueError("assign_sharded expects a mesh with a "
-                             "'model' axis")
-        n = points.shape[0]
-        n_shards = int(mesh.shape["model"])
-        sidx = self._sharded_index(n_shards)
-        capacity = capacity_for(n, self.cfg.cap_shard / n_shards)
-        cap_pip = capacity_for(capacity, self.cfg.cap_boundary,
-                               ceiling=capacity)
-        sid, cid, bid, st = _sharded_assign(
-            sidx, points, mesh, self.cfg.fast_cfg(), capacity, cap_pip)
-        return AssignResult(sid, cid, bid, GeoStats(
-            n_need=st["n_boundary"], n_pip=st["n_pip"],
-            overflow=st["overflow"] + st["n_dropped"], extra=st))
+
+__all__ = ["EngineConfig", "GeoEngine", "GeoIndexSet", "STRATEGIES",
+           "available_strategies"]

@@ -278,6 +278,9 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
                 cfg: FastConfig = FastConfig()):
     """Map [N, 2] points -> (state, county, block ids, stats)."""
     n = points.shape[0]
+    # Defense in depth for direct callers: engine-built paths already
+    # fail this at construction (registry capability validation,
+    # DESIGN.md §11), so an engine user never reaches this raise.
     if cfg.fused and cfg.mode == "exact" and index.edge_pool is None:
         raise ValueError("FastConfig.fused needs an index built with "
                          "with_pool=True (FastIndex.from_covering)")

@@ -1,0 +1,178 @@
+"""Strategy protocol + registry: the engine's pluggable dispatch surface
+(DESIGN.md §11).
+
+``GeoEngine`` used to hard-code its strategy choice in if/elif chains —
+every new execution plan (a different PIP schedule, a sharded layout, a
+learned router) meant editing engine code.  This module replaces that
+with a registry: a strategy is an object implementing the ``Strategy``
+protocol, registered under a name with declared *capability flags*, and
+the engine resolves names through ``get_strategy`` only.  Third-party
+strategies register with the decorator and are immediately buildable,
+plannable, and servable::
+
+    from repro.core.registry import Strategy, register_strategy
+
+    @register_strategy("my-strategy", needs=("fast",),
+                       needs_edge_pool=True)
+    class MyStrategy(Strategy):
+        def assign(self, indices, points, cfg):
+            ...  # -> AssignResult, bottoming out in resolve_candidates
+
+Capability flags answer the three questions the engine, the artifact
+builder (core/artifact.py) and the planner (core/plan.py) ask *before*
+any trace runs:
+
+  * ``needs``            — which ``GeoIndexSet`` components the strategy
+                           reads ("simple", "fast", "covering");
+  * ``needs_edge_pool``  — whether ``cfg.fused`` requires blocked-CSR
+                           edge pools on those components (strategies may
+                           refine per-config via ``pool_components``);
+  * ``supports_sharded`` — implements ``assign_sharded`` (mesh lookup);
+  * ``supports_padded``  — safe under ``GeoEngine.assign_padded``'s FAR
+                           padding convention (the serving layer requires
+                           it).
+
+``Strategy.validate`` turns those declarations into loud *build-time*
+errors: a fused config meeting a pool-less index fails when the engine is
+constructed, not on the first ``assign`` (which used to be a trace-time
+surprise deep inside jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+COMPONENTS = ("simple", "fast", "covering")
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyCaps:
+    """Declared capabilities of a registered strategy (see module doc)."""
+
+    needs: Tuple[str, ...] = ()
+    needs_edge_pool: bool = False
+    supports_sharded: bool = False
+    supports_padded: bool = True
+
+
+class Strategy:
+    """Base class for registered strategies.
+
+    Subclasses implement ``assign`` (and ``assign_sharded`` when
+    ``caps.supports_sharded``); everything else has capability-driven
+    defaults.  ``name`` and ``caps`` are attached by
+    ``register_strategy``.
+    """
+
+    name: str = "?"
+    caps: StrategyCaps = StrategyCaps()
+
+    # -- capability queries (engine / artifact / planner, pre-trace) -------
+
+    def required_components(self, cfg) -> Tuple[str, ...]:
+        """GeoIndexSet components this strategy reads under ``cfg``."""
+        return self.caps.needs
+
+    def pool_components(self, cfg) -> Tuple[str, ...]:
+        """Components whose blocked-CSR edge pools ``cfg`` requires —
+        empty unless the config routes candidate PIP through the fused
+        gather-PIP kernel.  Default: every index component in ``needs``
+        when ``cfg.fused`` and the strategy declares ``needs_edge_pool``;
+        strategies with config-dependent pool use override this (e.g.
+        fast-approx never PIPs)."""
+        if not (self.caps.needs_edge_pool and getattr(cfg, "fused", False)):
+            return ()
+        return tuple(c for c in self.caps.needs if c != "covering")
+
+    def validate(self, indices, cfg) -> None:
+        """Raise ValueError if ``indices`` lacks a component or pool this
+        strategy needs under ``cfg`` — called at engine construction so
+        capability gaps surface at build/plan time, never at the first
+        ``assign`` (DESIGN.md §11).  A strategy with no single-mesh
+        ``assign`` at all (e.g. the sharded-only plugin) is rejected
+        here too — an engine is an assign surface."""
+        if type(self).assign is Strategy.assign:
+            kind = ("sharded-only" if self.caps.supports_sharded
+                    else "abstract")
+            raise ValueError(
+                f"strategy {self.name!r} implements no single-mesh "
+                f"assign ({kind}) — build the engine with an "
+                f"assign-capable strategy; engine.assign_sharded routes "
+                f"to sharded plugins by itself")
+        caps = indices.capabilities()
+        for comp in self.required_components(cfg):
+            if not caps.get(comp, False):
+                raise ValueError(
+                    f"strategy {self.name!r} needs a {comp}_index"
+                    if comp != "covering" else
+                    f"strategy {self.name!r} needs a cell covering "
+                    f"(build the engine from a census)")
+        for comp in self.pool_components(cfg):
+            if not caps.get(f"{comp}_pool", False):
+                raise ValueError(
+                    f"strategy {self.name!r} with fused=True needs the "
+                    f"{comp} index built with_pool(s)=True — rebuild via "
+                    f"GeoIndexSet/GeoEngine.build, which size pools from "
+                    f"the config, or drop fused")
+
+    # -- execution ----------------------------------------------------------
+
+    def assign(self, indices, points, cfg):
+        """[N, 2] points -> AssignResult against ``indices``."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} does not implement single-mesh "
+            f"assign")
+
+    def assign_sharded(self, indices, points, mesh, cfg):
+        """Sharded lookup over ``mesh`` (only when supports_sharded)."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} does not support sharded assign")
+
+
+_REGISTRY: dict[str, Strategy] = {}
+
+
+def register_strategy(name: str, *, needs: Tuple[str, ...] = (),
+                      needs_edge_pool: bool = False,
+                      supports_sharded: bool = False,
+                      supports_padded: bool = True):
+    """Class decorator: instantiate and register ``cls`` under ``name``
+    with the declared capability flags.  Re-registering a name replaces
+    the previous entry (last registration wins — deliberate, so tests and
+    downstream packages can shadow built-ins)."""
+    unknown = set(needs) - set(COMPONENTS)
+    if unknown:
+        raise ValueError(f"unknown index components {sorted(unknown)}; "
+                         f"expected a subset of {COMPONENTS}")
+
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        inst.caps = StrategyCaps(needs=tuple(needs),
+                                 needs_edge_pool=needs_edge_pool,
+                                 supports_sharded=supports_sharded,
+                                 supports_padded=supports_padded)
+        _REGISTRY[name] = inst
+        return cls
+
+    return deco
+
+
+def get_strategy(name: str) -> Strategy:
+    """Resolve a registered strategy by name (ValueError on unknown)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown strategy {name!r}; expected one of "
+                         f"{available_strategies()} (or 'auto')") from None
+
+
+def available_strategies() -> Tuple[str, ...]:
+    """Registered strategy names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def sharded_strategies() -> Tuple[str, ...]:
+    """Names of strategies that implement ``assign_sharded``."""
+    return tuple(n for n, s in _REGISTRY.items()
+                 if s.caps.supports_sharded)

@@ -211,9 +211,23 @@ def first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
 def _pip_ids(points, pid, edges_table, edge_pool, backend):
     """Inside mask of each point vs its own candidate id (pid < 0 = never
     inside).  Fused CSR path when an edge pool is provided; the legacy
-    gather-then-kernel flow otherwise."""
+    gather-then-kernel flow otherwise.
+
+    The fused call is made in candidate-id-sorted order: the gather-PIP
+    kernel skips the HBM->VMEM block DMA when consecutive grid rows map
+    to the same pool block, so sorting amortizes edge traffic to near
+    zero on repeated candidates (ROADMAP PR 2 item).  The permutation is
+    local to this function — rows are inverse-permuted before returning,
+    and each row's crossing count depends only on its own (point, id) —
+    so every caller sees results bit-identical to the unsorted order,
+    including the two-phase schedule's inner compaction.
+    """
     if edge_pool is not None:
-        return ops.pip_candidates(points, pid, edge_pool, backend=backend)
+        order = jnp.argsort(
+            jnp.where(pid >= 0, pid, jnp.int32(2**31 - 1)), stable=True)
+        inside = ops.pip_candidates(points[order], pid[order], edge_pool,
+                                    backend=backend)
+        return jnp.zeros_like(inside).at[order].set(inside)
     edges = edges_table[jnp.clip(pid, 0, edges_table.shape[0] - 1)]
     return ops.pip_gathered(points, edges, backend=backend) & (pid >= 0)
 
@@ -257,13 +271,17 @@ def _pip_two_phase(points, cand_ids, edges_table, need, backend, cap2,
     miss = need & ~in0
     n_miss = jnp.sum(miss.astype(jnp.int32))
     idx2, ok2 = compact_indices(miss, cap2)
-    phase2_miss = n_miss - jnp.sum((miss[idx2] & ok2).astype(jnp.int32))
+    # Unfilled phase-2 slots alias row 0; guard the counter with ok2 so a
+    # row-0 miss doesn't phantom-count PIP tests for them (it would make
+    # n_pip depend on which row the compaction's buffer order put first).
+    real2 = miss[idx2] & ok2
+    phase2_miss = n_miss - jnp.sum(real2.astype(jnp.int32))
     rest = cand_ids[idx2, 1:]                        # [R2, K-1]
     flat_pid = rest.reshape(-1)
     pts_rep = jnp.repeat(points[idx2], kk - 1, axis=0)
     in_r = _pip_ids(pts_rep, flat_pid, edges_table, edge_pool, backend)
     in_r = (in_r & (flat_pid >= 0)).reshape(-1, kk - 1)
-    n_pip = n_pip + jnp.sum((miss[idx2][:, None]
+    n_pip = n_pip + jnp.sum((real2[:, None]
                              & (rest >= 0)).astype(jnp.int32))
     score = jnp.where(in_r, kk - jnp.arange(1, kk)[None, :], 0)
     best = jnp.argmax(score, axis=1)

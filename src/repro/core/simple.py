@@ -171,6 +171,8 @@ def cascade_assign(index: SimpleIndex, points: jnp.ndarray,
     other strategies — notably the engine's hybrid mode — can embed it."""
     n = points.shape[0]
     backend = cfg.backend
+    # Defense in depth for direct callers — engine-built paths fail this
+    # at construction instead (registry validation, DESIGN.md §11).
     if cfg.fused and index.state_pool is None:
         raise ValueError("SimpleConfig.fused needs an index built with "
                          "with_pools=True (SimpleIndex.from_census)")

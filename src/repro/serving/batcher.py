@@ -29,8 +29,9 @@ server owns result assembly, metrics, and caching.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any
+from typing import Any, Optional
 
 import numpy as np
 
@@ -91,9 +92,22 @@ class MicroBatcher:
         # requeued tails of split requests (see ``requeue``).
         self._q: deque = deque()
         self.queued_points = 0
+        # perf_counter of the oldest queued arrival — the deadline-flush
+        # clock (GeoServer's ``max_delay_ms``).  Armed when the queue
+        # goes non-empty, cleared on drain; a requeue after a failed
+        # flush RE-ARMS it (see ``requeue``), so the deadline bounds the
+        # wait since the last serve attempt, not since first arrival.
+        self._oldest_ts: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def oldest_age_s(self) -> float:
+        """Seconds the oldest queued request has been waiting (0.0 when
+        the queue is empty)."""
+        if self._oldest_ts is None:
+            return 0.0
+        return time.perf_counter() - self._oldest_ts
 
     def put(self, ticket: Any, points: np.ndarray) -> bool:
         """Enqueue one request.  Returns False when the ``block`` policy
@@ -109,13 +123,21 @@ class MicroBatcher:
             return False
         self._q.append((ticket, np.asarray(points, np.float32), 0))
         self.queued_points += n
+        if self._oldest_ts is None:
+            self._oldest_ts = time.perf_counter()
         return True
 
     def requeue(self, entries) -> None:
         """Push (ticket, points, base_off) slices back to the FRONT of
         the queue, preserving their order — the server's recovery path
         when a flush dies mid-serve, so drained-but-unserved work is
-        never lost (it simply serves on the next flush)."""
+        never lost (it simply serves on the next flush).  Requeued work
+        is by definition the oldest in the queue: the deadline clock
+        restarts at the requeue (the original arrival time left with
+        ``drain``), so a crash-looping flush still re-arms the deadline
+        rather than firing it on every retry."""
+        if entries and self._oldest_ts is None:
+            self._oldest_ts = time.perf_counter()
         self._q.extendleft(reversed(entries))
         self.queued_points += sum(len(p) for _, p, _ in entries)
 
@@ -151,4 +173,5 @@ class MicroBatcher:
                 off += take
         close()
         self.queued_points = 0
+        self._oldest_ts = None
         return batches

@@ -6,6 +6,8 @@ asks to surface: the per-request ``GeoStats``/``ResolveStats`` counters
 PIP's cap2 is undersized for live traffic — plus overflow and boundary
 fraction), cache hit/miss traffic, queue depth, batch-fill ratio (valid
 rows / padded slots — how much of the bucket ladder's padding is waste),
+deadline-triggered flushes (``deadline_flushes`` — how often the
+``max_delay_ms`` SLO clock, not the size trigger, forced a batch out),
 and request latency percentiles over a sliding sample window.
 
 ``snapshot()`` renders the whole registry as one JSON-ready dict:

@@ -12,7 +12,10 @@ The pieces (each its own module, composable without the facade):
 
   * ``batcher.MicroBatcher``  — bounded FIFO queue; coalesces requests
     into micro-batches padded up the bucket ladder so each strategy
-    compiles once per bucket, with block/shed backpressure;
+    compiles once per bucket, with block/shed backpressure.  Flushes
+    fire on ``submit``, on the size trigger (block policy), and — when
+    ``ServeConfig.max_delay_ms`` is set — on a time deadline
+    (``poll()``), so latency SLOs hold under trickle traffic;
   * ``cache.HotCellCache``    — exact host-side hot-cell shortcut for
     interior-cell traffic, full-engine fallback for everything else;
   * ``metrics.ServerMetrics`` — counters/gauges/latency registry
@@ -38,8 +41,13 @@ With the cache on the same holds for every exact engine configuration
 
 The serving loop is synchronous and single-threaded by design — the unit
 of concurrency in this stack is the device batch, not the Python thread;
-an async front-end would own the socket and call ``enqueue``/``flush``
-on its event loop.
+an async front-end would own the socket and call ``enqueue``/``flush``/
+``poll`` on its event loop.
+
+**Cold start**: ``GeoServer.from_artifact(path)`` serves a
+``GeoIndexSet`` saved with ``indices.save(path)`` (core/artifact.py) —
+the covering BFS comes off disk, device indices rebuild bit-identically,
+and ``strategy="auto"`` replans for the current device.
 """
 from __future__ import annotations
 
@@ -73,6 +81,15 @@ class ServeConfig:
     cache: bool = True                 # hot-cell cache (cache.py)
     cache_capacity: int = 1 << 16      # LRU entries per region
     latency_window: int = 4096         # latency percentile sample window
+    max_delay_ms: Optional[float] = None  # flush deadline: oldest queued
+    #                                       request older than this
+    #                                       triggers a flush (enqueue
+    #                                       checks it; timers call
+    #                                       ``poll()``) so trickle
+    #                                       traffic still meets latency
+    #                                       SLOs instead of waiting for
+    #                                       the size trigger.  None =
+    #                                       size/submit-driven only.
 
 
 @dataclasses.dataclass
@@ -202,10 +219,27 @@ class GeoServer:
     def build(cls, census: CensusMap, strategy: str = "fast",
               cfg: Optional[ServeConfig] = None,
               engine_cfg: Optional[EngineConfig] = None) -> "GeoServer":
-        """Single-region convenience: build the engine and serve it."""
+        """Single-region convenience: build the engine and serve it
+        (``strategy="auto"`` lets the planner choose — see
+        core/plan.py)."""
         engine = GeoEngine.build(census, strategy,
                                  engine_cfg or EngineConfig())
         return cls(engine, cfg)
+
+    @classmethod
+    def from_artifact(cls, path: str, strategy: str = "auto",
+                      cfg: Optional[ServeConfig] = None,
+                      engine_cfg: Optional[EngineConfig] = None
+                      ) -> "GeoServer":
+        """Cold start from a saved ``GeoIndexSet`` artifact
+        (core/artifact.py): the covering BFS is read from disk instead of
+        rebuilt, device indices are re-derived bit-identically, and the
+        served assignments match the engine that saved the artifact.
+        ``strategy="auto"`` replans against the loaded capabilities."""
+        from repro.core.artifact import GeoIndexSet
+        indices = GeoIndexSet.load(path)
+        engine = GeoEngine.from_index_set(indices, strategy, engine_cfg)
+        return cls(engine, cfg, covering=indices.covering)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -247,6 +281,10 @@ class GeoServer:
             self.flush()
             self.batcher.put(ticket, points)
         self._update_queue_gauges()
+        # Deadline trigger rides the arrival path too: a trickle of tiny
+        # requests must not wait for the size trigger (idle gaps are the
+        # timer's job — ``poll()``).
+        self.poll()
         return ticket
 
     def submit(self, points) -> ServeResult:
@@ -255,6 +293,21 @@ class GeoServer:
         if not ticket.done:
             self.flush()
         return ticket.result()
+
+    def poll(self) -> int:
+        """Deadline tick (``ServeConfig.max_delay_ms``): flush when the
+        oldest queued request has waited past the deadline; returns
+        micro-batches served (0 = nothing due).  ``enqueue`` calls this
+        on every arrival; an async front-end or timer loop calls it in
+        idle gaps so the last trickle request is never stranded.
+        Deadline-triggered flushes are counted in ``deadline_flushes``
+        (metrics) so SLO pressure is visible next to the size trigger."""
+        if self.cfg.max_delay_ms is None or not len(self.batcher):
+            return 0
+        if self.batcher.oldest_age_s() * 1e3 < self.cfg.max_delay_ms:
+            return 0
+        self.metrics.inc("deadline_flushes")
+        return self.flush()
 
     def flush(self) -> int:
         """Drain the queue through the engines; returns micro-batches

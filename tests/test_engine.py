@@ -102,6 +102,10 @@ def test_engine_validation():
         GeoEngine("simple", EngineConfig())
     with pytest.raises(ValueError, match="needs a fast_index"):
         GeoEngine("fast", EngineConfig())
+    # The sharded plugin has no single-mesh assign; an engine built on
+    # it would only fail at the first assign — reject at construction.
+    with pytest.raises(ValueError, match="single-mesh"):
+        GeoEngine("sharded", EngineConfig())
 
 
 def test_assign_sharded_requires_model_axis(engines, points_small):
@@ -189,11 +193,45 @@ def test_fused_sharded_matches_ground_truth(engines, synth_small,
     np.testing.assert_array_equal(np.asarray(res.block), bid)
 
 
-def test_fused_without_pool_raises(engines, points_small):
-    """An index built without pools refuses fused configs loudly instead
-    of silently running the legacy path."""
-    xy, *_ = points_small
-    eng = GeoEngine("fast", dataclasses.replace(EXACT_CFG, fused=True),
-                    fast_index=engines["fast"].fast_index)
+def test_fused_without_pool_raises_at_construction(engines):
+    """A fused config over a pool-less index is a *build-time* error
+    (registry capability validation) — it must never survive to the
+    first assign as a trace-time surprise."""
     with pytest.raises(ValueError, match="with_pool"):
-        eng.assign(jnp.asarray(xy))
+        GeoEngine("fast", dataclasses.replace(EXACT_CFG, fused=True),
+                  fast_index=engines["fast"].fast_index)
+    # approx mode never PIPs, so fused needs no pool there.
+    GeoEngine("fast",
+              dataclasses.replace(EXACT_CFG, fused=True, mode="approx"),
+              fast_index=engines["fast"].fast_index)
+
+
+def test_third_party_strategy_registers_without_engine_changes(
+        engines, points_small):
+    """The registry is the engine's whole dispatch surface: a strategy
+    registered from outside core/ builds, validates, and assigns through
+    the unchanged GeoEngine."""
+    from repro.core.registry import (Strategy, available_strategies,
+                                     register_strategy)
+    from repro.core.resolve import AssignResult, GeoStats
+
+    @register_strategy("centre-owner", needs=("fast",))
+    class CentreOwner(Strategy):
+        def assign(self, indices, points, cfg):
+            fcfg = dataclasses.replace(cfg.fast_cfg(), mode="approx")
+            sid, cid, bid, st = fast_mod.assign_fast(indices.fast,
+                                                     points, fcfg)
+            return AssignResult(sid, cid, bid, GeoStats(
+                n_need=st["n_boundary"], n_pip=st["n_pip"],
+                overflow=st["overflow"], extra=st))
+
+    assert "centre-owner" in available_strategies()
+    xy, *_ = points_small
+    eng = GeoEngine("centre-owner", EXACT_CFG,
+                    fast_index=engines["fast"].fast_index)
+    approx = GeoEngine("fast",
+                       dataclasses.replace(EXACT_CFG, mode="approx"),
+                       fast_index=engines["fast"].fast_index)
+    np.testing.assert_array_equal(
+        np.asarray(eng.assign(jnp.asarray(xy)).block),
+        np.asarray(approx.assign(jnp.asarray(xy)).block))

@@ -222,6 +222,38 @@ def test_fused_edge_pool_matches_legacy(poly_world, two_phase):
     assert int(ls.n_pip) == int(fs.n_pip)
 
 
+@pytest.mark.parametrize("two_phase", [False, True])
+@pytest.mark.parametrize("cap2", [256, 8])
+def test_fused_sort_by_candidate_bit_identical_under_compaction(
+        poly_world, two_phase, cap2):
+    """The fused path runs each kernel call in candidate-id-sorted order
+    for block-DMA reuse (PR 2 open item); the permutation is unwound
+    inside the call, so with a real capacity compaction in play — and
+    even with a tiny cap2 that overflows the phase-2 compaction — the
+    assignments AND stats stay bit-identical to the legacy unsorted
+    gather flow."""
+    rings, edges, pts = poly_world
+    pool = ops.build_edge_pool(np.asarray(edges), be=128)
+    n = len(pts)
+    rng = np.random.default_rng(5)
+    # Shuffled candidate rows -> the sort actually permutes the buffer.
+    cand = jnp.asarray(rng.permuted(
+        np.tile(np.arange(len(rings), dtype=np.int32), (n, 1)), axis=1))
+    need = jnp.asarray(rng.random(n) < 0.7)
+    cap = 256
+    assert cap < int(np.asarray(need).sum())     # compaction overflows
+    legacy, ls = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                    cap=cap, backend="ref",
+                                    two_phase=two_phase, cap2=cap2)
+    fused, fs = resolve_candidates(jnp.asarray(pts), cand, edges, need,
+                                   cap=cap, backend="ref",
+                                   two_phase=two_phase, cap2=cap2,
+                                   edge_pool=pool)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(fused))
+    for field in ("n_need", "n_pip", "overflow", "phase2_miss"):
+        assert int(getattr(ls, field)) == int(getattr(fs, field)), field
+
+
 def test_fused_edge_pool_interpret_backend(poly_world):
     """The fused path under the Pallas interpret backend is bit-exact with
     the ref oracle end-to-end through resolve_candidates (small buffer:

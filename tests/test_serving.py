@@ -4,6 +4,7 @@ direct GeoEngine.assign, backpressure, metrics schema, and multi-region
 routing edge cases.
 """
 import json
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -78,6 +79,70 @@ def test_batcher_validation():
         MicroBatcher(buckets=(256, 64))
     with pytest.raises(ValueError, match="policy"):
         MicroBatcher(policy="drop")
+
+
+def test_batcher_oldest_age_lifecycle():
+    """The deadline clock arms on the first put, survives further puts,
+    and clears on drain (requeue re-arms it)."""
+    b = MicroBatcher(buckets=BUCKETS)
+    assert b.oldest_age_s() == 0.0
+    b.put("t0", np.zeros((4, 2), np.float32))
+    time.sleep(0.002)
+    age = b.oldest_age_s()
+    assert age > 0.0
+    b.put("t1", np.zeros((4, 2), np.float32))
+    assert b.oldest_age_s() >= age            # later put can't reset it
+    b.drain()
+    assert b.oldest_age_s() == 0.0
+    b.requeue([("t0", np.zeros((4, 2), np.float32), 0)])
+    assert b.oldest_age_s() >= 0.0 and len(b) == 1
+
+
+# -- deadline flush (ServeConfig.max_delay_ms) -------------------------------
+
+def test_deadline_flush_on_enqueue(engines, points_small):
+    """With a zero deadline, every arrival finds the oldest request
+    overdue: enqueue itself flushes, no submit needed, and the flush is
+    counted as deadline-triggered."""
+    xy, *_ = points_small
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=False,
+                                   max_delay_ms=0.0))
+    ticket = server.enqueue(xy[:37])
+    assert ticket.done
+    snap = server.snapshot()
+    assert snap["counters"]["deadline_flushes"] >= 1
+    direct = engines["fast_fused"].assign(jnp.asarray(xy[:37]))
+    np.testing.assert_array_equal(ticket.result().block,
+                                  np.asarray(direct.block))
+
+
+def test_deadline_poll_serves_stranded_trickle(engines, points_small):
+    """A lone queued request past its deadline is served by poll() —
+    the timer path an async front-end drives in idle gaps."""
+    xy, *_ = points_small
+    # Deadline far above scheduling jitter so the not-due assertion
+    # can't flake on a loaded machine.
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=False,
+                                   max_delay_ms=200.0))
+    ticket = server.enqueue(xy[:3])           # young: enqueue won't flush
+    assert not ticket.done
+    assert server.poll() == 0                 # not due yet
+    time.sleep(0.25)
+    assert server.poll() == 1                 # overdue: one micro-batch
+    assert ticket.done
+    assert server.snapshot()["counters"]["deadline_flushes"] == 1
+
+
+def test_no_deadline_means_no_arrival_flush(engines, points_small):
+    xy, *_ = points_small
+    server = GeoServer(engines["fast_fused"],
+                       ServeConfig(buckets=BUCKETS, cache=False))
+    ticket = server.enqueue(xy[:5])
+    assert not ticket.done and server.poll() == 0
+    server.flush()
+    assert ticket.done
 
 
 # -- padded assign: stats purity (satellite) ---------------------------------
