@@ -47,7 +47,7 @@ import sys, time, pickle
 import jax, jax.numpy as jnp, numpy as np
 sys.path.insert(0, "src"); sys.path.insert(0, ".")
 from benchmarks import common
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, use_mesh
 sc = common.get_census()
 xy, *_ = sc.sample_points(np.random.default_rng(7), {n_pts})
 pts = jnp.asarray(xy)
@@ -56,7 +56,7 @@ if "{mode}" == "simple":
     idx = SimpleIndex.from_census(sc.census)
     cfg = SimpleConfig(cap_state=0.5, cap_county=0.5, cap_block=0.5)
     mesh = make_test_mesh(({n_dev}, 1))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         f = jax.jit(lambda p: assign_simple(idx, p, cfg)[2],
                     in_shardings=jax.sharding.NamedSharding(
                         mesh, jax.sharding.PartitionSpec("data", None)))
@@ -71,7 +71,7 @@ else:
     mesh = make_test_mesh((max({n_dev}//n_model, 1), n_model))
     sidx = shard_covering(cov, sc.census, n_shards=n_model)
     cfg = FastConfig(mode="exact", cap_boundary=0.5)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         f = jax.jit(lambda p: assign_fast_distributed(sidx, p, mesh, cfg)[2])
         f(pts).block_until_ready()
         t0 = time.perf_counter(); f(pts).block_until_ready()

@@ -92,7 +92,15 @@ class CheckpointManager:
     def restore(self, step: int, like_tree, shardings=None):
         """Restore into the structure of ``like_tree``; if ``shardings``
         (a matching pytree of NamedSharding) is given, arrays are placed
-        directly onto the (possibly different) mesh — elastic re-scaling."""
+        directly onto the (possibly different) mesh — elastic re-scaling.
+
+        Without explicit ``shardings``, each leaf is re-placed with the
+        sharding of the corresponding ``like_tree`` leaf when it is a
+        committed jax.Array: a mid-run restart under a mesh must put
+        params back on their FSDP/TP layout, not concentrate them on the
+        default device.  Plain host arrays restore to the default device
+        as before.
+        """
         path = os.path.join(self.dir, f"step_{step:08d}")
         with np.load(os.path.join(path, "arrays.npz")) as z:
             host = {k: z[k] for k in z.files}
@@ -110,8 +118,18 @@ class CheckpointManager:
             arrays = [jax.device_put(a, s)
                       for a, s in zip(arrays, sh_leaves)]
         else:
-            arrays = [jax.device_put(np.asarray(a)) for a in arrays]
+            arrays = [jax.device_put(np.asarray(a), self._leaf_sharding(l))
+                      for a, l in zip(arrays, leaves_like)]
         return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    @staticmethod
+    def _leaf_sharding(like_leaf):
+        """The placement to restore onto: the like-leaf's own sharding for
+        committed device arrays, default placement (None) otherwise."""
+        sh = getattr(like_leaf, "sharding", None)
+        if sh is not None and getattr(like_leaf, "is_deleted", lambda: False)():
+            return None
+        return sh
 
     def meta(self, step: int) -> dict:
         path = os.path.join(self.dir, f"step_{step:08d}", "meta.json")

@@ -33,7 +33,7 @@ from repro.core.geometry import CensusMap
 from repro.core.compact import capacity_for
 from repro.core.resolve import ResolveStats, resolve_candidates
 from repro.kernels import ops
-from repro.launch.mesh import shard_map
+from repro.compat import shard_map
 
 
 @jax.tree_util.register_pytree_node_class

@@ -30,7 +30,7 @@ from repro.core.simple import SimpleConfig, SimpleIndex
 from repro.distributed.dispatch import (plan_routes, scatter_to_buckets,
                                         slot_tables)
 from repro.kernels import ops
-from repro.launch.mesh import shard_map
+from repro.compat import shard_map
 
 
 @register_strategy("simple", needs=("simple",), needs_edge_pool=True)

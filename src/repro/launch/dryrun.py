@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.base import RunConfig, ShapeConfig, shapes_for
 from repro.launch.hlo_cost import cost_of
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models.model import build_model, input_specs
 from repro.models.module import abstract_params, param_bytes, param_count
 from repro.optim import adamw
@@ -51,7 +51,7 @@ def run_cell(arch: str, shape: ShapeConfig, mesh, run: RunConfig,
     model = build_model(cfg)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p_abs = model.abstract_params()
         p_sh = param_shardings(model.specs, mesh)
         params = abstract_with_sharding(p_abs, p_sh)

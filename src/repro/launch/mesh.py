@@ -1,44 +1,20 @@
-"""Production mesh builders + jax version-compat shims.
+"""Production mesh builders (jax version shims live in repro.compat).
 
 ``make_production_mesh`` is a FUNCTION (never a module-level constant) so
 importing this module never touches jax device state — required for the
 dry-run's XLA_FLAGS ordering (see launch/dryrun.py).
 
-The compat shims (``make_mesh``, ``shard_map``, ``use_mesh``) paper over
-the jax.sharding API churn between 0.4.x and 0.5+: AxisType / jax.set_mesh
-/ jax.shard_map only exist on newer versions, and the geo engine's sharded
-assign must run on both.
+The compat shims (``make_mesh``, ``shard_map``, ``use_mesh``) moved to
+``repro.compat`` (DESIGN.md §12) so model code can import them without
+pulling in launcher modules; they are re-exported here for existing
+callers — both names are the same objects.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import AxisType, make_mesh, shard_map, use_mesh  # noqa: F401
 
-try:                                        # jax >= 0.5
-    from jax.sharding import AxisType
-except ImportError:                         # pragma: no cover - older jax
-    AxisType = None
-
-try:                                        # jax >= 0.5
-    shard_map = jax.shard_map
-except AttributeError:                      # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map  # noqa: F401
-
-
-def make_mesh(shape, axes):
-    """jax.make_mesh with explicit Auto axis types where supported."""
-    if AxisType is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def use_mesh(mesh):
-    """Context manager activating ``mesh`` (jax.set_mesh on new jax, the
-    Mesh object's own context manager — which sets the resource env — on
-    old)."""
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)
-    return mesh
+__all__ = ["AxisType", "make_mesh", "shard_map", "use_mesh",
+           "make_production_mesh", "make_test_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -19,12 +19,15 @@ os.environ.setdefault(
     "--xla_tpu_overlap_compute_collective_tc=true")
 
 import argparse
+import contextlib
 
 import jax
 
+from repro.compat import use_mesh
 from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.configs.base import RunConfig
 from repro.data.pipeline import SyntheticLM, make_source
+from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.models.module import init_params, param_count
 from repro.optim import adamw
@@ -69,9 +72,14 @@ def main() -> None:
 
     model = build_model(cfg)
     params = init_params(model.specs, jax.random.key(args.seed))
-    opt = adamw.init(params)
+    # Data-parallel mesh over every local device, activated through the
+    # compat layer so the same entry point runs on 0.4.x and 0.5+ jax
+    # (DESIGN.md §12).  Single-device hosts (the CPU container) keep the
+    # exact unsharded path.
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
     print(f"[train] {cfg.name}: {param_count(model.specs):,} params, "
-          f"{len(jax.devices())} devices")
+          f"{n_dev} devices" + (f", mesh {dict(mesh.shape)}" if mesh else ""))
 
     geo = None
     if args.geo_enrich:
@@ -89,10 +97,18 @@ def main() -> None:
         seq_len = args.seq
     src = make_source(cfg, Shape, seed=args.seed, geo=geo)
 
-    step_fn = jax.jit(make_train_step(model, run))
+    step_fn = jax.jit(make_train_step(model, run, mesh))
     dcfg = DriverConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
                         ckpt_dir=args.ckpt_dir)
-    params, opt, hist = train_loop(step_fn, params, opt, src, dcfg)
+    with use_mesh(mesh) if mesh is not None else contextlib.nullcontext():
+        if mesh is not None:
+            # FSDP-place params before the first step; the optimizer state
+            # inherits the layout (and the checkpoint restore path re-places
+            # onto it after a crash — see checkpoint/manager.restore).
+            params = jax.device_put(params, param_shardings(model.specs,
+                                                            mesh))
+        opt = adamw.init(params)
+        params, opt, hist = train_loop(step_fn, params, opt, src, dcfg)
     print(f"[train] done: loss {hist['loss'][0]:.4f} -> "
           f"{hist['loss'][-1]:.4f}, {hist['steps_run']} steps, "
           f"{hist['restarts']} restarts, {hist['stragglers']} stragglers")

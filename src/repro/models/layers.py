@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.models.module import P
 
 ACT_DTYPE = jnp.bfloat16
@@ -12,19 +13,15 @@ ACT_DTYPE = jnp.bfloat16
 BATCH = ("pod", "data")
 
 
-def shard_act(x, *parts):
-    """Activation sharding constraint against the ambient (abstract) mesh.
+def act_spec(shape, parts, mesh) -> PartitionSpec:
+    """The PartitionSpec ``shard_act`` would apply to ``shape`` on ``mesh``.
 
-    Axis names absent from the mesh are dropped; entries whose dimension is
-    not divisible by the assigned mesh extent are replicated (e.g. 4 kv
-    heads on a 16-way model axis).  A no-op when no mesh is set (CPU smoke
-    tests) — GSPMD propagation alone loses batch sharding through the
-    scanned/blocked attention reshapes, so the model calls this explicitly
-    at block boundaries.
+    Axis names absent from the mesh are dropped; entries whose dimension
+    is not divisible by the assigned mesh extent are replicated (e.g. 4
+    kv heads on a 16-way model axis).  ``mesh`` only needs ``axis_names``
+    and a name->size ``shape`` mapping (Mesh, AbstractMesh, or a test
+    stub).
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return x
     names = set(mesh.axis_names)
 
     def extent(axes):
@@ -34,7 +31,7 @@ def shard_act(x, *parts):
         return n
 
     spec = []
-    for dim, p in zip(x.shape, parts):
+    for dim, p in zip(shape, parts):
         if p is None:
             spec.append(None)
             continue
@@ -44,7 +41,25 @@ def shard_act(x, *parts):
             spec.append(axes if len(axes) > 1 else axes[0])
         else:
             spec.append(None)
-    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    return PartitionSpec(*spec)
+
+
+def shard_act(x, *parts):
+    """Activation sharding constraint against the ambient mesh.
+
+    A no-op when no mesh is active (CPU smoke tests) — GSPMD propagation
+    alone loses batch sharding through the scanned/blocked attention
+    reshapes, so the model calls this explicitly at block boundaries.
+    The mesh comes from ``repro.compat.get_abstract_mesh()`` — never from
+    newer-jax symbols directly — so the same model code runs on the
+    pinned 0.4.x toolchain inside ``compat.use_mesh(...)`` scopes
+    (DESIGN.md §12).
+    """
+    mesh = compat.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    return compat.with_sharding_constraint(
+        x, act_spec(x.shape, parts, mesh), mesh=mesh)
 
 
 def rmsnorm_spec(d):

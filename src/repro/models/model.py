@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models import ssm, xlstm
 from repro.models import transformer as tf
-from repro.models.layers import ACT_DTYPE, dense, embed, embed_spec, \
-    rmsnorm, rmsnorm_spec, unembed, unembed_spec
+from repro.models.layers import ACT_DTYPE, BATCH, dense, embed, embed_spec, \
+    rmsnorm, rmsnorm_spec, shard_act, unembed, unembed_spec
 from repro.models.module import P, abstract_params, stack
 from repro.models.moe import moe_ffn
 
@@ -50,7 +50,6 @@ def _head_specs(cfg):
 
 
 def _logits(params, cfg, x):
-    from repro.models.layers import BATCH, shard_act
     x = shard_act(x, BATCH, None, None)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if cfg.tie_embeddings:

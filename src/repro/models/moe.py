@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
+from repro.compat import shard_map
 from repro.distributed.dispatch import gather_from_buckets, plan_routes, \
     scatter_to_buckets, slot_tables
 from repro.models.ffn import ffn, ffn_spec
@@ -178,7 +179,7 @@ def moe_ffn(params, cfg, x, mesh=None):
             return out.reshape(bl, s, d), me, ce, dropped
 
         bspec = dp_axes if dp_axes else None
-        y, me, ce, dropped = jax.shard_map(
+        y, me, ce, dropped = shard_map(
             body, mesh=mesh,
             in_specs=(PS(bspec, None, None),
                       PS(None, None),

@@ -5,6 +5,10 @@ Designed for fleets where steps fail (preemption, flaky hosts, data blips):
   * checkpoint/restart — async checkpoints every ``ckpt_every`` steps; any
     step exception restores the latest checkpoint and resumes.  The data
     pipeline is stateless (batch = f(seed, step)) so the resume is bitwise.
+    When training under a mesh (``repro.compat.use_mesh`` scopes), pass
+    ``shardings`` — or rely on the restore path re-placing each leaf onto
+    the live params' own committed shardings — so a restart keeps the
+    FSDP/TP layout instead of concentrating state on one device.
   * bounded retries  — ``max_restarts`` guards against crash loops.
   * straggler watch  — per-step wall times are tracked; a step slower than
     ``straggler_factor`` x the running median is counted and surfaced via

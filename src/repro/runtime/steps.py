@@ -13,33 +13,29 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.configs.base import ModelConfig, RunConfig
+from repro.models.layers import act_spec
 from repro.models.model import Model
 from repro.optim import adamw
 from repro.sharding.rules import param_shardings
 
 
 def _shard(x, mesh, *parts):
-    """Sharding constraint; part entries not present in the mesh are
-    dropped (e.g. "pod" on the single-pod mesh), never silently ignored as
-    a whole."""
+    """Sharding constraint with the same policy as ``shard_act`` (one
+    implementation: ``models.layers.act_spec``): part entries absent from
+    the mesh are dropped (e.g. "pod" on the single-pod mesh), never
+    silently ignored as a whole, and non-divisible dims replicate.
+    ``mesh=None`` falls back to the ambient mesh (a no-op when none is
+    active); the constraint goes through repro.compat so the step
+    builders run on the pinned 0.4.x jax (DESIGN.md §12)."""
+    if mesh is None:
+        mesh = compat.get_abstract_mesh()
     if mesh is None:
         return x
-    names = set(mesh.axis_names)
-
-    def keep(p):
-        if p is None:
-            return None
-        if isinstance(p, (tuple, list)):
-            kept = tuple(a for a in p if a in names)
-            return kept if len(kept) > 1 else (kept[0] if kept else None)
-        return p if p in names else None
-
-    spec = PartitionSpec(*(keep(p) for p in parts))
-    return jax.lax.with_sharding_constraint(
-        x, jax.sharding.NamedSharding(mesh, spec))
+    return compat.with_sharding_constraint(
+        x, act_spec(x.shape, parts, mesh), mesh=mesh)
 
 
 def cross_entropy(logits, labels, z_loss_coef: float, mesh=None):
@@ -141,6 +137,17 @@ def make_train_step(model: Model, run: RunConfig, mesh=None):
 
         lr = adamw.schedule(run, opt.step)
         params, opt, gnorm = adamw.update(grads, opt, params, run, lr)
+        if p_sh is not None:
+            # Pin the updated params and fp32 moments back to the declared
+            # (FSDP+TP) layout.  Newer-jax GSPMD usually propagates this on
+            # its own; on the pinned 0.4.x toolchain propagation may choose
+            # a different output sharding, silently re-laying-out params
+            # every step and breaking the declared-sharding invariant.
+            params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  params, p_sh)
+            opt = opt._replace(
+                m=jax.tree.map(jax.lax.with_sharding_constraint, opt.m, p_sh),
+                v=jax.tree.map(jax.lax.with_sharding_constraint, opt.v, p_sh))
         metrics = dict(metrics)
         metrics["grad_norm"] = gnorm
         metrics["lr"] = lr

@@ -19,6 +19,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro import compat
 from repro.models.module import P
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
@@ -58,7 +59,20 @@ def spec_pspec(p: P, mesh: Mesh, rules=None) -> PartitionSpec:
     return PartitionSpec(*parts)
 
 
-def param_shardings(specs, mesh: Mesh, rules=None):
+def param_shardings(specs, mesh: Optional[Mesh] = None, rules=None):
+    """NamedSharding tree for a spec tree.
+
+    ``mesh=None`` resolves the ambient *concrete* mesh (the scope opened
+    by ``repro.compat.use_mesh`` — NamedSharding needs real devices, so
+    an abstract mesh alone is not enough); no active mesh is an error
+    rather than a silent replication.
+    """
+    if mesh is None:
+        mesh = compat.concrete_mesh()
+        if mesh is None:
+            raise ValueError(
+                "param_shardings: no mesh argument and no ambient mesh "
+                "active (wrap the call in repro.compat.use_mesh(...))")
     return jax.tree.map(
         lambda p: NamedSharding(mesh, spec_pspec(p, mesh, rules)), specs,
         is_leaf=lambda x: isinstance(x, P))

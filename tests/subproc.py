@@ -1,0 +1,45 @@
+"""Shared harness for tests that must run in a fresh interpreter (jax
+locks the fake-device count at first init, so multi-device cases cannot
+run in the main pytest process).
+
+``assert_subprocess_ok`` replaces the old pattern of asserting on
+``CompletedProcess.stdout`` directly, which buried the child's real
+traceback inside a giant repr (or dropped it entirely) when the child
+died: on failure it raises with labelled tails of BOTH streams, so the
+first line of pytest's short summary shows the child's actual error.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, *, extra_env: dict | None = None,
+           timeout: float = 600.0) -> subprocess.CompletedProcess:
+    """Run ``code`` with a fresh interpreter from the repo root with
+    PYTHONPATH=src (the child picks its own XLA_FLAGS before importing
+    jax — that must happen before any jax import, hence in the child)."""
+    env = {**os.environ, "PYTHONPATH": "src", **(extra_env or {})}
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, cwd=REPO_ROOT, env=env,
+                          timeout=timeout)
+
+
+def assert_subprocess_ok(code: str, sentinel: str, **kwargs) -> str:
+    """Run ``code`` and require ``sentinel`` on its stdout.
+
+    Failure surfaces the child's exit status, stdout tail and stderr tail
+    (where python writes the traceback) instead of a bare repr.
+    Returns the child's stdout for further assertions.
+    """
+    out = run_py(code, **kwargs)
+    if sentinel not in out.stdout:
+        raise AssertionError(
+            f"subprocess never printed sentinel {sentinel!r} "
+            f"(exit status {out.returncode})\n"
+            f"--- child stdout (tail) ---\n{out.stdout[-2000:]}\n"
+            f"--- child stderr (tail) ---\n{out.stderr[-4000:]}")
+    return out.stdout

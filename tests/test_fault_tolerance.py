@@ -100,8 +100,7 @@ def test_elastic_restore_onto_new_mesh(tmp_path):
     FSDP+TP shardings, then onto (4,2) — elastic re-scaling is a restore
     with new shardings, no format change (runs in a subprocess because the
     device count is locked at jax init)."""
-    import subprocess
-    import sys
+    from subproc import assert_subprocess_ok
     code = f"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -129,9 +128,32 @@ for shape in ((2, 4), (4, 2)):
         assert b.sharding == s, (b.sharding, s)
 print("ELASTIC_OK")
 """
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={**os.environ,
-                                          "PYTHONPATH": "src"},
-                         cwd=os.path.dirname(os.path.dirname(
-                             os.path.abspath(__file__))))
-    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+    assert_subprocess_ok(code, "ELASTIC_OK")
+
+
+def test_restore_without_shardings_preserves_mesh_placement(tmp_path):
+    """The driver's crash-restore path passes ``shardings=None``; restore
+    must put arrays back onto the like-tree's own committed shardings
+    (FSDP layout survives a restart), not concentrate them on the default
+    device."""
+    from subproc import assert_subprocess_ok
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((2, 4))
+sh = NamedSharding(mesh, PartitionSpec("data", None))
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8), sh)
+mgr = CheckpointManager({str(tmp_path)!r}, async_save=False)
+mgr.save(3, {{"params": {{"w": x}}}})
+back = mgr.restore(3, {{"params": {{"w": x}}}})   # no shardings argument
+w = back["params"]["w"]
+assert w.sharding.shard_shape(w.shape) == (4, 8), w.sharding
+np.testing.assert_array_equal(np.asarray(w), np.asarray(x))
+print("RESTORE_SHARDING_OK")
+"""
+    assert_subprocess_ok(code, "RESTORE_SHARDING_OK")

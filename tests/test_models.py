@@ -151,9 +151,7 @@ def test_dispatch_roundtrip_properties(seed, n, nb, cap):
 
 
 def test_moe_sharded_matches_local_subprocess():
-    import os
-    import subprocess
-    import sys
+    from subproc import assert_subprocess_ok
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -161,7 +159,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.models.moe import moe_spec, moe_ffn
 from repro.models.module import init_params
 from repro.configs.base import ModelConfig
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, use_mesh
 for ne, mdl in ((8, 4), (2, 4)):   # EP and virtual-expert paths
     cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
                       n_heads=4, n_kv_heads=2, d_ff=0, vocab=10,
@@ -171,16 +169,11 @@ for ne, mdl in ((8, 4), (2, 4)):   # EP and virtual-expert paths
     x = jax.random.normal(jax.random.key(1), (4, 8, 32), jnp.bfloat16)
     y_ref, aux_ref = moe_ffn(params, cfg, x)
     mesh = make_test_mesh((2, mdl))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y, aux = jax.jit(lambda p, x: moe_ffn(p, cfg, x, mesh=mesh))(params, x)
     err = float(jnp.max(jnp.abs(y.astype(jnp.float32) - y_ref.astype(jnp.float32))))
     assert err < 0.2, (ne, mdl, err)
     assert abs(float(aux["lb_loss"]) - float(aux_ref["lb_loss"])) < 1e-2
 print("MOE_SHARDED_OK")
 """
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True,
-                         env={**os.environ, "PYTHONPATH": "src"},
-                         cwd=os.path.dirname(os.path.dirname(
-                             os.path.abspath(__file__))))
-    assert "MOE_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+    assert_subprocess_ok(code, "MOE_SHARDED_OK")

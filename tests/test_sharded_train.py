@@ -1,9 +1,7 @@
 """Full train step under a (2,4) mesh on 8 fake devices: loss matches the
 single-device step, params stay finite, shardings are as declared.
 Runs in a subprocess (device count locks at jax init)."""
-import os
-import subprocess
-import sys
+from subproc import assert_subprocess_ok
 
 
 def test_sharded_train_step_matches_local():
@@ -14,7 +12,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_reduced_config
 from repro.configs.base import RunConfig
 from repro.data.pipeline import SyntheticLM
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, use_mesh
 from repro.models.model import build_model
 from repro.models.module import init_params
 from repro.optim import adamw
@@ -34,7 +32,7 @@ for arch in ("qwen1.5-0.5b", "mixtral-8x7b"):
     # local reference
     _, _, m_ref = jax.jit(make_train_step(model, run))(params, opt, batch)
     mesh = make_test_mesh((2, 4))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p_sh = param_shardings(model.specs, mesh)
         params_s = jax.device_put(params, p_sh)
         opt_s = adamw.init(params_s)
@@ -49,10 +47,4 @@ for arch in ("qwen1.5-0.5b", "mixtral-8x7b"):
     print(arch, "OK dloss", dl)
 print("SHARDED_TRAIN_OK")
 """
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True,
-                         env={**os.environ, "PYTHONPATH": "src"},
-                         cwd=os.path.dirname(os.path.dirname(
-                             os.path.abspath(__file__))))
-    assert "SHARDED_TRAIN_OK" in out.stdout, \
-        out.stdout[-500:] + out.stderr[-2000:]
+    assert_subprocess_ok(code, "SHARDED_TRAIN_OK")
