@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from benchmarks.roofline import geo_roofline
+from repro.core.artifact import GeoIndexSet
 from repro.core.engine import EngineConfig, GeoEngine
 from repro.core.fast import FastIndex, leaf_codes, locate_cells
 
@@ -28,6 +30,13 @@ N_POINTS = int(os.environ.get("BENCH_GEO_N", 1_000_000))
 SMOKE_N = int(os.environ.get("BENCH_GEO_SMOKE_N", 20_000))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
                         "BENCH_geo.json")
+TUNED_INDEX_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "results", "tuned_index")
+# Edge-pool block sizes the one-pass sweep tries (the kernel's DMA
+# granularity: bigger blocks amortize DMA issue, smaller ones waste less
+# on short polygons).  Smoke keeps two candidates so verify stays cheap.
+BE_SWEEP = (128, 256, 512)
+BE_SWEEP_SMOKE = (128, 256)
 
 
 def t(fn, *a, r=5):
@@ -41,10 +50,44 @@ def t(fn, *a, r=5):
     return float(np.median(ts))
 
 
-def bench_strategies(census, cov, pts, bid, repeats=5):
-    """points/sec + accuracy for simple / fast-exact (legacy + fused) /
-    fast-approx / hybrid, all through the GeoEngine facade."""
+def _bench_row(eng, pts, bid, repeats):
+    """One bench row for a built engine.  One jitted callable serves
+    both timing and the row's stats (one compile per strategy); t()
+    blocks on the whole pytree, so the timed quantity includes the stats
+    scalars — the serving path computes them anyway, and they are
+    reductions over work already done.
+
+    GeoStats counters ride in every row (as_dict: n_need / n_pip /
+    overflow / phase2_miss / boundary count) so the bench history catches
+    silent degradation — a capacity squeeze or a phase-2 miss creep shows
+    up even when points/sec holds steady.  Every row also records the
+    engine's plan (strategy/mode/fused + reasons) so bench history ties
+    numbers to the execution plan that produced them."""
     n = pts.shape[0]
+    f = jax.jit(lambda p, e=eng: e.assign(p))
+    dt = t(f, pts, r=repeats)
+    res = f(pts)
+    acc = float(np.mean(np.asarray(res.block) == bid))
+    stats = res.stats.as_dict()
+    return {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
+            "accuracy": acc, "plan": eng.explain(), **stats}
+
+
+def _print_row(name, row, tag=""):
+    print(f"{name:16s}: {row['wall_ms']:7.1f}ms "
+          f"({row['pts_per_sec']/1e6:5.2f}M pts/s) "
+          f"acc {row['accuracy']:.4f} | boundary {row['n_boundary']} "
+          f"pip {row['n_pip']} overflow {row['overflow']} "
+          f"p2miss {row['phase2_miss']}{tag}")
+
+
+def bench_strategies(census, cov, pts, bid, repeats=5, tuned_iset=None,
+                     roof=None):
+    """points/sec + accuracy for simple / fast-exact (legacy + fused) /
+    fast-onepass / fast-approx / hybrid, all through the GeoEngine
+    facade.  ``tuned_iset`` (from ``autotune_onepass``) supplies the
+    fast_onepass row's artifact so it runs at the tuned edge-pool block
+    size, with the tuning record and roofline fraction in the row."""
     results = {}
     specs = {
         "simple": ("simple", EngineConfig()),
@@ -60,31 +103,69 @@ def bench_strategies(census, cov, pts, bid, repeats=5):
     }
     for name, (strategy, cfg) in specs.items():
         eng = GeoEngine.build(census, strategy, cfg, covering=cov)
-        # One jitted callable serves both timing and the row's stats
-        # (one compile per strategy); t() blocks on the whole pytree, so
-        # the timed quantity includes the stats scalars — the serving
-        # path computes them anyway, and they are reductions over work
-        # already done.
-        f = jax.jit(lambda p, e=eng: e.assign(p))
-        dt = t(f, pts, r=repeats)
-        res = f(pts)
-        acc = float(np.mean(np.asarray(res.block) == bid))
-        # GeoStats counters ride in every row (as_dict: n_need / n_pip /
-        # overflow / phase2_miss / boundary count) so the bench history
-        # catches silent degradation — a capacity squeeze or a phase-2
-        # miss creep shows up even when points/sec holds steady.
-        stats = res.stats.as_dict()
-        # Every row records the engine's plan (strategy/mode/fused +
-        # reasons; the planner's own choice for the "auto" row) so bench
-        # history ties numbers to the execution plan that produced them.
-        results[name] = {"pts_per_sec": n / dt, "wall_ms": dt * 1e3,
-                         "accuracy": acc, "plan": eng.explain(), **stats}
-        tag = f" -> {eng.strategy}" if strategy == "auto" else ""
-        print(f"{name:16s}: {dt*1e3:7.1f}ms ({n/dt/1e6:5.2f}M pts/s) "
-              f"acc {acc:.4f} | boundary {stats['n_boundary']} "
-              f"pip {stats['n_pip']} overflow {stats['overflow']} "
-              f"p2miss {stats['phase2_miss']}{tag}")
+        row = results[name] = _bench_row(eng, pts, bid, repeats)
+        _print_row(name, row,
+                   f" -> {eng.strategy}" if strategy == "auto" else "")
+    if tuned_iset is not None:
+        eng = GeoEngine.from_index_set(tuned_iset, "fast_onepass")
+        row = _bench_row(eng, pts, bid, repeats)
+        row["tuning"] = dict(tuned_iset.tuning)
+        if roof is not None:
+            row["roofline_fraction"] = roof["roofline_fraction"]
+            row["achieved_bw"] = roof["achieved_bw"]
+        results["fast_onepass"] = row
+        _print_row("fast_onepass", row,
+                   f" be={tuned_iset.pool_be()}")
     return results
+
+
+def autotune_onepass(census, cov, pts, bid, smoke, repeats=3):
+    """Roofline-driven tile sweep for the one-pass cascade: try each
+    edge-pool block size, race the winner against the strongest
+    two-kernel baseline (fast_exact fused), and persist the measurement
+    into a ``GeoIndexSet`` manifest (``results/tuned_index``) — the
+    record ``core/plan.py`` reads so ``strategy="auto"`` picks the
+    measured winner instead of hard-coded thresholds.
+
+    Returns (tuned GeoIndexSet, roofline row for the tuned kernel)."""
+    n = pts.shape[0]
+    iset = GeoIndexSet(census=census, covering=cov)
+    sweep = BE_SWEEP_SMOKE if smoke else BE_SWEEP
+    best = None
+    for be in sweep:
+        iset.record_tuning({"be": be})   # drops pools -> repack at be
+        eng = GeoEngine.from_index_set(iset, "fast_onepass")
+        dt = t(jax.jit(lambda p, e=eng: e.assign(p)), pts, r=repeats)
+        rate = n / dt
+        print(f"autotune be={be:4d}: {dt*1e3:7.1f}ms "
+              f"({rate/1e6:5.2f}M pts/s)")
+        if best is None or rate > best[1]:
+            best = (be, rate)
+    be, rate = best
+    iset.record_tuning({"be": be})
+    eng_fx = GeoEngine.from_index_set(
+        iset, "fast", EngineConfig(mode="exact", fused=True))
+    dt_fx = t(jax.jit(lambda p, e=eng_fx: e.assign(p)), pts, r=repeats)
+    rate_fx = n / dt_fx
+    winner = "fast_onepass" if rate >= rate_fx else "fast_exact"
+    eng_best = GeoEngine.from_index_set(iset, "fast_onepass")
+    roof = geo_roofline("fast_onepass",
+                        lambda p, e=eng_best: e.assign(p).block, (pts,),
+                        n, repeats=repeats)
+    iset.record_tuning({
+        "winner": winner, "be": int(be),
+        "device_kind": jax.default_backend(),
+        "pts_per_sec": float(rate),
+        "baseline_pts_per_sec": float(rate_fx),
+        "roofline_fraction": float(roof["roofline_fraction"]),
+        "recorded": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    })
+    iset.save(TUNED_INDEX_PATH)
+    print(f"autotune winner: {winner} (onepass be={be}: "
+          f"{rate/1e6:.2f}M pts/s vs fast_exact_fused "
+          f"{rate_fx/1e6:.2f}M pts/s; roofline "
+          f"{roof['roofline_fraction']:.3f}) -> {TUNED_INDEX_PATH}")
+    return iset, roof
 
 
 def bench_fast_stages(census, cov, pts, bid):
@@ -122,8 +203,12 @@ def main():
     print(f"n={n_points} points, {len(cov.lo)} cells"
           + (" [smoke]" if args.smoke else ""))
 
+    tuned_iset, roof = autotune_onepass(census, cov, pts, bid,
+                                        smoke=args.smoke,
+                                        repeats=3 if args.smoke else 5)
     results = bench_strategies(census, cov, pts, bid,
-                               repeats=3 if args.smoke else 5)
+                               repeats=3 if args.smoke else 5,
+                               tuned_iset=tuned_iset, roof=roof)
     if not args.smoke:
         bench_fast_stages(census, cov, pts, bid)
 

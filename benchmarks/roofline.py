@@ -16,6 +16,15 @@ across baselines (ring factors ~2(N-1)/N are absorbed into the constant).
 MODEL_FLOPS uses 6*N*D (train) / 2*N*D (prefill/decode) with N = active
 params (MoE counts shared + top-k routed only).  The "roofline fraction" is
 useful-compute-time / bottleneck-term — the score we hillclimb in §Perf.
+
+**Geo mode** (``--geo [--smoke]``): instead of reading a dry-run file,
+measure the geo kernels live — achieved vs peak bandwidth/FLOPs per
+kernel from XLA cost analysis over the bench census (DESIGN.md §13).
+Each run appends a ``kind: "roofline_geo"`` row to
+``results/BENCH_geo.json`` so the bandwidth trajectory accumulates next
+to the points/sec history:
+
+    PYTHONPATH=src python -m benchmarks.roofline --geo --smoke
 """
 import argparse
 import json
@@ -25,7 +34,21 @@ PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # B/s / chip
 ICI_BW = 50e9             # B/s / link
 
+# Nominal CPU anchors for the geo rows when the bench runs off-TPU.
+# Order-of-magnitude single-socket figures: the point of the geo rows is
+# the *trajectory* of achieved bandwidth on a fixed device kind (and the
+# memory- vs compute-bound verdict), not cross-device comparisons.
+CPU_PEAK_FLOPS = 1.0e12   # FLOP/s, vectorized f32
+CPU_MEM_BW = 80e9         # B/s
+
 sys.path.insert(0, "src")
+
+
+def device_peaks(device_kind: str) -> tuple:
+    """(peak FLOP/s, peak B/s) for a jax backend kind."""
+    if device_kind == "tpu":
+        return PEAK_FLOPS, HBM_BW
+    return CPU_PEAK_FLOPS, CPU_MEM_BW
 
 
 def active_params(arch: str, total: int) -> int:
@@ -96,13 +119,107 @@ def improvement_hint(a: dict) -> str:
            "all-gathers to bf16"
 
 
+def compiled_cost(compiled) -> dict:
+    """(flops, bytes accessed) from a jax compiled artifact's cost
+    analysis — tolerant of the dict-vs-singleton-list return shape that
+    varies across jax versions, and of missing keys (TPU interpret)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def geo_roofline(name: str, fn, args_: tuple, n_points: int,
+                 repeats: int = 3) -> dict:
+    """One achieved-vs-peak row for a geo kernel: compile ``fn`` once,
+    take FLOPs + bytes from the compiled cost analysis, wall time from a
+    median of ``repeats`` runs, and divide by the device-kind peaks."""
+    import jax
+
+    from benchmarks import common
+
+    f = jax.jit(fn)
+    cost = compiled_cost(f.lower(*args_).compile())
+    dt, _ = common.timeit(f, *args_, repeats=repeats)
+    device_kind = jax.default_backend()
+    peak_flops, peak_bw = device_peaks(device_kind)
+    achieved_bw = cost["bytes_accessed"] / dt
+    achieved_flops = cost["flops"] / dt
+    bw_frac = achieved_bw / peak_bw
+    flop_frac = achieved_flops / peak_flops
+    return {
+        "kernel": name, "n_points": int(n_points),
+        "device_kind": device_kind,
+        "wall_ms": dt * 1e3, "pts_per_sec": n_points / dt,
+        "flops": cost["flops"], "bytes_accessed": cost["bytes_accessed"],
+        "bytes_per_point": cost["bytes_accessed"] / max(n_points, 1),
+        "achieved_bw": achieved_bw, "achieved_flops": achieved_flops,
+        "bw_fraction": bw_frac, "flop_fraction": flop_frac,
+        # Distance to the nearest roof — the score the tile sweep
+        # (geo_perf --autotune) hillclimbs.
+        "roofline_fraction": max(bw_frac, flop_frac),
+        "dominant": "memory" if bw_frac >= flop_frac else "compute",
+    }
+
+
+def geo_main(smoke: bool) -> None:
+    """Live achieved-bandwidth rows for the geo strategies (see module
+    docstring); appends one roofline_geo run to results/BENCH_geo.json."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks import common
+    from repro.core.engine import EngineConfig, GeoEngine
+
+    n = int(min(1 << 18, 20_000 if smoke else 1 << 18))
+    census = common.get_census().census
+    cov = common.get_covering(9)
+    xy, _, *_ = common.sample_points(n)
+    pts = jnp.asarray(xy, jnp.float32)
+    specs = {
+        "fast_exact": ("fast", EngineConfig(mode="exact", fused=True)),
+        "fast_onepass": ("fast_onepass", EngineConfig()),
+    }
+    kernels = {}
+    print(f"geo roofline: n={n} points, device={jax.default_backend()}"
+          + (" [smoke]" if smoke else ""))
+    for name, (strategy, cfg) in specs.items():
+        eng = GeoEngine.build(census, strategy, cfg, covering=cov)
+        row = geo_roofline(name, lambda p, e=eng: e.assign(p).block,
+                           (pts,), n, repeats=3 if smoke else 5)
+        kernels[name] = row
+        print(f"{name:14s}: {row['wall_ms']:7.1f}ms "
+              f"({row['pts_per_sec']/1e6:5.2f}M pts/s) | "
+              f"{row['achieved_bw']/1e9:6.2f} GB/s "
+              f"({row['bw_fraction']*100:5.2f}% of peak) | "
+              f"{row['bytes_per_point']:6.0f} B/pt | {row['dominant']}")
+    run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "kind": "roofline_geo", "smoke": bool(smoke),
+           "n_points": n, "device_kind": jax.default_backend(),
+           "kernels": kernels}
+    n_runs = common.append_bench_run(run)
+    print(f"wrote {common.BENCH_GEO_PATH} ({n_runs} runs)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="results/dryrun.json")
     ap.add_argument("--mesh", default=None,
                     choices=(None, "single_pod", "multi_pod"))
     ap.add_argument("--json-out", default="results/roofline.json")
+    ap.add_argument("--geo", action="store_true",
+                    help="live geo-kernel achieved-bandwidth rows "
+                         "instead of dry-run analysis")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --geo: verify-sized batch")
     args = ap.parse_args()
+    if args.geo:
+        geo_main(args.smoke)
+        return
     recs = json.load(open(args.path))
     rows = []
     for r in recs:

@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Soft perf ratchet over the bench trajectory (results/BENCH_geo.json).
+
+Compares the latest run's ``fast_exact`` / ``fast_onepass`` points/sec
+against the trailing median of earlier runs at the same batch size, and
+WARNS on a >30 % regression.  Deliberately non-fatal by default: the
+bench rows come from shared CI machines whose load jitters, so a hard
+gate here would flake — the warning plus the accumulated trajectory is
+the review signal (``--strict`` upgrades warnings to exit 1 for local
+perf work).
+
+    PYTHONPATH=src python scripts/check_bench.py [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "BENCH_geo.json")
+STRATEGIES = ("fast_exact", "fast_onepass")
+WINDOW = 8          # trailing runs the median is taken over
+THRESHOLD = 0.30    # warn when latest < (1 - THRESHOLD) * median
+
+
+def strategy_rate(run: dict, strategy: str):
+    """pts_per_sec for one strategy row of a geo_perf run, else None
+    (roofline_geo / serve_perf runs share the file and have no
+    ``strategies`` block)."""
+    row = (run.get("strategies") or {}).get(strategy)
+    if not row:
+        return None
+    rate = float(row.get("pts_per_sec") or 0.0)
+    return rate if rate > 0 else None
+
+
+def check_strategy(runs: list, strategy: str) -> tuple[str, bool]:
+    """(human-readable verdict line, regressed?) for one strategy."""
+    rows = [(r.get("n_points"), strategy_rate(r, strategy)) for r in runs]
+    rows = [(n, v) for n, v in rows if v is not None]
+    if not rows:
+        return f"{strategy}: no bench rows yet", False
+    n_latest, latest = rows[-1]
+    prior = [v for n, v in rows[:-1] if n == n_latest][-WINDOW:]
+    if not prior:
+        return (f"{strategy}: first row at n={n_latest} "
+                f"({latest/1e6:.2f}M pts/s) — no history to compare"),\
+            False
+    med = statistics.median(prior)
+    ratio = latest / med
+    line = (f"{strategy}: {latest/1e6:.2f}M pts/s vs trailing median "
+            f"{med/1e6:.2f}M ({len(prior)} runs at n={n_latest}, "
+            f"ratio {ratio:.2f})")
+    if ratio < 1.0 - THRESHOLD:
+        return (f"WARNING: {line} — >{THRESHOLD:.0%} regression", True)
+    return line, False
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default=DEFAULT_PATH)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on a regression warning")
+    args = ap.parse_args()
+    if not os.path.exists(args.path):
+        print(f"check_bench: no {args.path} — nothing to check")
+        return 0
+    try:
+        with open(args.path) as f:
+            runs = json.load(f).get("runs", [])
+    except (json.JSONDecodeError, AttributeError) as e:
+        print(f"check_bench: unreadable {args.path} ({e}) — skipping")
+        return 0
+    regressed = False
+    for strategy in STRATEGIES:
+        line, bad = check_strategy(runs, strategy)
+        print(f"check_bench: {line}")
+        regressed = regressed or bad
+    return 1 if (regressed and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

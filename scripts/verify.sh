@@ -11,7 +11,11 @@
 #   3. benchmarks/geo_perf --smoke and benchmarks/serve_perf --smoke
 #      (run even on test failure: known-failing model-stack tests must
 #      not starve the bench record);
-#   4. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
+#   4. benchmarks/roofline --geo --smoke — achieved-vs-peak bandwidth
+#      rows for the geo kernels appended to the same trajectory, then
+#      scripts/check_bench.py (soft perf ratchet: warns, never fails,
+#      on a >30% points/sec regression vs the trailing median);
+#   5. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
 #      (the serving cold-start path) checked bit-identical.
 #
 # Exit status: the baseline gate's verdict wins; bench/smoke failures
@@ -31,9 +35,13 @@ python -m benchmarks.geo_perf --smoke
 bench=$?
 python -m benchmarks.serve_perf --smoke
 serve_bench=$?
+python -m benchmarks.roofline --geo --smoke
+roofline=$?
+python scripts/check_bench.py   # soft ratchet: informational exit only
 python scripts/artifact_smoke.py
 smoke=$?
 [ "$bench" -eq 0 ] && bench=$serve_bench
+[ "$bench" -eq 0 ] && bench=$roofline
 [ "$bench" -eq 0 ] && bench=$smoke
 [ "$status" -eq 0 ] && status=$bench
 exit $status

@@ -51,7 +51,10 @@ from repro.core.geometry import CensusMap, PolygonSoup
 from repro.core.simple import SimpleIndex
 from repro.kernels import ops
 
-SCHEMA_VERSION = 1
+# v2 adds the ``tuning`` manifest block (autotuned one-pass kernel
+# config, DESIGN.md §13); v1 artifacts load with empty tuning.
+SCHEMA_VERSION = 2
+ACCEPTED_SCHEMA_VERSIONS = (1, 2)
 MANIFEST_NAME = "manifest.json"
 ARRAYS_NAME = "arrays.npz"
 FORMAT_NAME = "geo-index-set"
@@ -79,6 +82,13 @@ class GeoIndexSet:
     max_level: int = 9
     gbits: int = 4
     max_cand: int = 8
+    # Autotune record (benchmarks/geo_perf.py --autotune): winning
+    # strategy + edge-pool block size + the measurement context.  Rides
+    # in the manifest (schema v2) so a reloaded artifact plans from
+    # recorded measurements, not hard-coded thresholds.  Keys (all
+    # optional): "winner", "be", "device_kind", "pts_per_sec",
+    # "roofline_fraction", "recorded".
+    tuning: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # -- construction -------------------------------------------------------
 
@@ -113,28 +123,30 @@ class GeoIndexSet:
             if self.simple is None:
                 self._need_census("the simple (cascade) index")
                 self.simple = SimpleIndex.from_census(self.census,
-                                                      with_pools=pool)
-            elif pool and self.simple.state_pool is None:
+                                                      with_pools=False)
+            if pool and self.simple.state_pool is None:
+                be = self.pool_be()
                 self.simple = dataclasses.replace(
                     self.simple,
                     state_pool=ops.build_edge_pool(
-                        np.asarray(self.simple.state_edges)),
+                        np.asarray(self.simple.state_edges), be=be),
                     county_pool=ops.build_edge_pool(
-                        np.asarray(self.simple.county_edges)),
+                        np.asarray(self.simple.county_edges), be=be),
                     block_pool=ops.build_edge_pool(
-                        np.asarray(self.simple.block_edges)))
+                        np.asarray(self.simple.block_edges), be=be))
         elif component == "fast":
             if self.fast is None:
                 self._need_census("the fast (cell) index")
                 self.ensure("covering")
                 self.fast = FastIndex.from_covering(
                     self.covering, self.census, gbits=self.gbits,
-                    with_pool=pool)
-            elif pool and self.fast.edge_pool is None:
+                    with_pool=False)
+            if pool and self.fast.edge_pool is None:
                 self.fast = dataclasses.replace(
                     self.fast,
                     edge_pool=ops.build_edge_pool(
-                        np.asarray(self.fast.block_edges)))
+                        np.asarray(self.fast.block_edges),
+                        be=self.pool_be()))
         else:
             raise ValueError(f"unknown index component {component!r}; "
                              f"expected 'simple', 'fast', or 'covering'")
@@ -154,13 +166,66 @@ class GeoIndexSet:
                                  "from a census with a cell covering "
                                  "(strategy 'fast' or 'hybrid')")
             self.sharded[n_shards] = shard_covering(
-                self.covering, self.census, n_shards, with_pool=with_pool)
-        elif with_pool and self.sharded[n_shards].edge_pool is None:
+                self.covering, self.census, n_shards, with_pool=False)
+        if with_pool and self.sharded[n_shards].edge_pool is None:
             sidx = self.sharded[n_shards]
             self.sharded[n_shards] = dataclasses.replace(
                 sidx, edge_pool=ops.build_edge_pool(
-                    np.asarray(sidx.block_edges)))
+                    np.asarray(sidx.block_edges), be=self.pool_be()))
         return self.sharded[n_shards]
+
+    # -- autotune record ----------------------------------------------------
+
+    def pool_be(self) -> int:
+        """Edge-pool block size (edges per CSR block): the autotuned
+        value when one is recorded, ``ops.DEF_BE`` otherwise.  Every
+        pool this artifact attaches (simple / fast / sharded) is packed
+        at this size, so the one-pass kernel's DMA granularity matches
+        the recorded winner."""
+        return int(self.tuning.get("be") or 0) or ops.DEF_BE
+
+    def record_tuning(self, tuning: Dict[str, Any]) -> None:
+        """Merge an autotune result into the artifact (persisted by
+        ``save``).  When the recorded ``be`` differs from the pools
+        already built, the built pools are dropped so the next
+        ``ensure(..., pool=True)`` repacks at the tuned size."""
+        old_be = self.pool_be()
+        self.tuning = {**self.tuning, **tuning}
+        if self.pool_be() != old_be:
+            if self.fast is not None and self.fast.edge_pool is not None:
+                self.fast = dataclasses.replace(self.fast, edge_pool=None)
+            if self.simple is not None \
+                    and self.simple.state_pool is not None:
+                self.simple = dataclasses.replace(
+                    self.simple, state_pool=None, county_pool=None,
+                    block_pool=None)
+            for n, sidx in list(self.sharded.items()):
+                if sidx.edge_pool is not None:
+                    self.sharded[n] = dataclasses.replace(
+                        sidx, edge_pool=None)
+
+    def memory_footprint(self) -> Dict[str, int]:
+        """Flat numeric snapshot of the built device-index memory (bytes
+        + chosen tile sizes), for serving metrics gauges.  Only counts
+        what is built right now — a lazy artifact reports 0s."""
+        fp = {"pool_be": self.pool_be(), "edge_pool_bytes": 0,
+              "edge_pool_blocks": 0, "edge_pool_max_blocks": 0,
+              "index_bytes": 0}
+        if self.fast is not None:
+            for leaf in (self.fast.cell_lo, self.fast.cell_hi,
+                         self.fast.cell_val, self.fast.top_start,
+                         self.fast.cand, self.fast.block_bbox):
+                if leaf is not None:
+                    fp["index_bytes"] += int(np.asarray(leaf).nbytes)
+            pool = self.fast.edge_pool
+            if pool is not None:
+                fp["edge_pool_bytes"] = int(
+                    np.asarray(pool.blocks).nbytes
+                    + np.asarray(pool.first).nbytes
+                    + np.asarray(pool.count).nbytes)
+                fp["edge_pool_blocks"] = int(pool.blocks.shape[0])
+                fp["edge_pool_max_blocks"] = int(pool.max_blocks)
+        return fp
 
     # -- capability snapshot (registry validation, planner) -----------------
 
@@ -222,6 +287,9 @@ class GeoIndexSet:
             },
             # Informational only — load() re-derives device indices.
             "built": self.capabilities(),
+            # Autotune record (schema v2): round-trips verbatim so a
+            # reloaded artifact plans from recorded measurements.
+            "tuning": self.tuning,
         }
         np.savez_compressed(os.path.join(path, ARRAYS_NAME), **arrays)
         with open(os.path.join(path, MANIFEST_NAME), "w") as f:
@@ -243,11 +311,11 @@ class GeoIndexSet:
             raise ValueError(f"manifest format {manifest.get('format')!r} "
                              f"is not {FORMAT_NAME!r}")
         version = manifest.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in ACCEPTED_SCHEMA_VERSIONS:
             raise ValueError(
                 f"unsupported schema_version {version!r} (this build "
-                f"reads version {SCHEMA_VERSION}); re-save the artifact "
-                f"with a matching build")
+                f"reads versions {sorted(ACCEPTED_SCHEMA_VERSIONS)}); "
+                f"re-save the artifact with a matching build")
         with np.load(os.path.join(path, ARRAYS_NAME)) as z:
             arrays = {k: z[k] for k in z.files}
         extent = tuple(float(v) for v in arrays["extent"])
@@ -269,4 +337,6 @@ class GeoIndexSet:
         return cls(census=census, covering=covering,
                    max_level=int(manifest["max_level"]),
                    gbits=int(manifest["gbits"]),
-                   max_cand=int(manifest["max_cand"]))
+                   max_cand=int(manifest["max_cand"]),
+                   # v1 manifests predate the tuning block: empty record.
+                   tuning=dict(manifest.get("tuning") or {}))

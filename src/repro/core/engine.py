@@ -4,7 +4,8 @@
 The engine composes three replaceable layers:
 
   * a **strategy registry** (core/registry.py + core/strategies.py):
-    simple | fast | hybrid | sharded ship as registered plugins over the
+    simple | fast | fast_onepass | hybrid | sharded ship as registered
+    plugins over the
     shared resolution core, and third-party strategies register without
     touching engine code;
   * a **unified index artifact** (core/artifact.py): one ``GeoIndexSet``
@@ -44,8 +45,12 @@ wrapper that pins the plan instead of asking the planner.
 Everything in ``EngineConfig`` is static (part of the jit cache key);
 ``fused=True`` swaps the candidate PIP data path for the fused gather-PIP
 Pallas kernel (kernels/gather_pip.py) in every strategy — results are
-identical, only the memory traffic changes (DESIGN.md §9).  Capability
-gaps (a fused config over a pool-less index, a missing index) surface as
+identical, only the memory traffic changes (DESIGN.md §9).
+``fused="onepass"`` goes one further on the exact fast path: the whole
+quantize -> cell lookup -> bbox filter -> PIP pipeline runs in ONE kernel
+with double-buffered edge DMA (kernels/cascade.py, DESIGN.md §13); the
+``"fast_onepass"`` strategy name pins the same plan.  Capability gaps (a
+fused config over a pool-less index, a missing index) surface as
 ValueError at *construction*, never at the first assign.
 """
 from __future__ import annotations
@@ -71,7 +76,7 @@ from repro.kernels import ops
 # Names an explicit ``GeoEngine.build(strategy=...)`` accepts (the
 # registry may hold more — anything registered works through the
 # constructor; "auto" additionally asks the planner).
-STRATEGIES = ("simple", "fast", "hybrid")
+STRATEGIES = ("simple", "fast", "fast_onepass", "hybrid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,16 +98,21 @@ class EngineConfig:
     gbits: int = 4               # top-grid bits (fast/hybrid)
     max_cand: int = 8            # boundary candidate list width
     cap_shard: float = 2.0       # sharded assign: capacity factor vs N/S
-    fused: bool = False          # route candidate PIP through the fused
+    fused: bool | str = False    # False | True | "onepass".  True routes
+    #                              candidate PIP through the fused
     #                              gather-PIP kernel (kernels/gather_pip.py)
     #                              in every strategy; results identical,
-    #                              the gathered [R, E, 4] HBM buffer gone
+    #                              the gathered [R, E, 4] HBM buffer gone.
+    #                              "onepass" additionally fuses the whole
+    #                              exact fast path into the single-kernel
+    #                              cascade (kernels/cascade.py) — other
+    #                              strategies treat it as True.
 
     def simple_cfg(self) -> SimpleConfig:
         return SimpleConfig(k_cand=self.k_cand, cap_state=self.cap_state,
                             cap_county=self.cap_county,
                             cap_block=self.cap_block, backend=self.backend,
-                            fused=self.fused)
+                            fused=bool(self.fused))
 
     def fast_cfg(self) -> FastConfig:
         return FastConfig(mode=self.mode, cap_boundary=self.cap_boundary,
@@ -113,7 +123,7 @@ class EngineConfig:
         # run it at full capacity — the buffer IS the capacity limit.
         return SimpleConfig(k_cand=self.k_cand, cap_state=1.0,
                             cap_county=1.0, cap_block=1.0,
-                            backend=self.backend, fused=self.fused)
+                            backend=self.backend, fused=bool(self.fused))
 
 
 class GeoEngine:
@@ -162,7 +172,8 @@ class GeoEngine:
         plan = None
         if strategy == "auto":
             indices.ensure("covering")
-            plan = plan_mod.plan_for(cfg, covering=indices.covering)
+            plan = plan_mod.plan_for(cfg, covering=indices.covering,
+                                     tuning=indices.tuning)
             cfg = plan.apply(cfg)
             strategy = plan.strategy
         impl = get_strategy(strategy)
@@ -189,7 +200,8 @@ class GeoEngine:
             if indices.census is not None:
                 indices.ensure("covering")
             plan = plan_mod.plan_for(cfg, covering=indices.covering,
-                                     capabilities=indices.capabilities())
+                                     capabilities=indices.capabilities(),
+                                     tuning=indices.tuning)
             cfg = plan.apply(cfg)
             strategy = plan.strategy
         impl = get_strategy(strategy)
@@ -233,7 +245,7 @@ class GeoEngine:
         return plan_mod.plan_for(
             self.cfg, covering=self.indices.covering,
             capabilities=self.indices.capabilities(),
-            n_points=n_points).as_dict()
+            n_points=n_points, tuning=self.indices.tuning).as_dict()
 
     # -- single-mesh assign ------------------------------------------------
 

@@ -27,8 +27,13 @@ import numpy as np
 from repro.core.cells import CellCovering, morton_np
 from repro.core.compact import capacity_for
 from repro.core.geometry import CensusMap
-from repro.core.resolve import resolve_candidates
+from repro.core.resolve import onepass_stats, resolve_candidates
 from repro.kernels import ops
+from repro.kernels import cascade as _cascade
+
+# One sentinel, two layers: the kernel package owns its copy (core
+# imports kernels, never the reverse) — they must never fork.
+assert _cascade.OUTSIDE == -2**30
 
 # Sentinel cell value for points outside the map (below any candidate row
 # encoding -(row+1)).
@@ -78,6 +83,9 @@ class FastIndex:
     quant: Any          # [4] f32: (x0, y0, sx, sy) with s = 2^L / extent
     edge_pool: Any = None  # blocked-CSR EdgePool over the same blocks
     #                        (fused gather-PIP path; FastConfig.fused)
+    block_bbox: Any = None  # [Nb, 4] f32 (xmin, xmax, ymin, ymax) — the
+    #                         one-pass cascade kernel's in-VMEM bbox
+    #                         filter stage (fused="onepass")
     # -- static --
     max_level: int = dataclasses.field(metadata=dict(static=True), default=9)
     gbits: int = dataclasses.field(metadata=dict(static=True), default=0)
@@ -87,7 +95,8 @@ class FastIndex:
     def tree_flatten(self):
         leaves = (self.cell_lo, self.cell_hi, self.cell_val, self.cand,
                   self.top_start, self.block_edges, self.block_parent,
-                  self.county_parent, self.quant, self.edge_pool)
+                  self.county_parent, self.quant, self.edge_pool,
+                  self.block_bbox)
         return leaves, (self.max_level, self.gbits, self.search_iters)
 
     @classmethod
@@ -139,6 +148,10 @@ class FastIndex:
             quant=jnp.asarray(quant),
             edge_pool=(ops.build_edge_pool(block_edges_np)
                        if with_pool else None),
+            # Always carried: [Nb, 4] is tiny, and the one-pass cascade
+            # needs it whenever a pool is attached (possibly later, via
+            # GeoIndexSet.ensure).
+            block_bbox=jnp.asarray(census.blocks.bbox, jnp.float32),
             max_level=cov.max_level,
             gbits=gbits,
             search_iters=iters,
@@ -247,9 +260,16 @@ class FastConfig:
     mode: str = "exact"          # "exact" | "approx"
     cap_boundary: float = 0.25   # compaction capacity for boundary points
     backend: str | None = None
-    fused: bool = False          # exact mode: fused gather-PIP kernel
-    #                              (index.edge_pool) instead of gather +
-    #                              pip_gathered; results are identical
+    fused: Any = False           # exact mode candidate-PIP data path:
+    #                              False     — gather + pip_gathered;
+    #                              True      — fused gather-PIP kernel
+    #                                          (index.edge_pool);
+    #                              "onepass" — the one-pass fused cascade
+    #                                          kernel (kernels/cascade.py):
+    #                                          the whole quantize/lookup/
+    #                                          bbox/PIP pipeline in one
+    #                                          kernel, no compaction.
+    #                              Results are identical in all three.
 
 
 def cell_values(index: FastIndex, points: jnp.ndarray) -> jnp.ndarray:
@@ -273,6 +293,30 @@ def parents_of(index, bid: jnp.ndarray):
     return cid, sid
 
 
+def assign_fast_onepass(index: FastIndex, points: jnp.ndarray,
+                        cfg: FastConfig):
+    """Exact-mode assignment through the one-pass fused cascade kernel
+    (kernels/cascade.py): quantize, cell lookup, bbox filter, and the
+    candidate PIP all in one kernel — no per-stage HBM intermediates and
+    no compaction buffers.  Assignments are bit-identical to the
+    two-phase ``assign_fast`` path (first matching candidate in slot
+    order, centre-owner fallback), and the stats counters match whenever
+    the two-phase caps are not overflowing (core.resolve.onepass_stats).
+    """
+    if index.edge_pool is None or index.block_bbox is None:
+        raise ValueError('FastConfig.fused="onepass" needs an index '
+                         "built by FastIndex.from_covering with a pool "
+                         "(with_pool=True / GeoIndexSet.ensure)")
+    bid, flags, nrest, nskip = ops.assign_cascade(
+        points, index.quant, index.cell_lo, index.cell_hi, index.cell_val,
+        index.top_start, index.cand, index.block_bbox, index.edge_pool,
+        max_level=index.max_level, gbits=index.gbits,
+        search_iters=index.search_iters, backend=cfg.backend)
+    stats = onepass_stats(flags, nrest, nskip)
+    cid, sid = parents_of(index, bid)
+    return sid, cid, bid, stats
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def assign_fast(index: FastIndex, points: jnp.ndarray,
                 cfg: FastConfig = FastConfig()):
@@ -284,6 +328,8 @@ def assign_fast(index: FastIndex, points: jnp.ndarray,
     if cfg.fused and cfg.mode == "exact" and index.edge_pool is None:
         raise ValueError("FastConfig.fused needs an index built with "
                          "with_pool=True (FastIndex.from_covering)")
+    if cfg.fused == "onepass" and cfg.mode == "exact":
+        return assign_fast_onepass(index, points, cfg)
     val = cell_values(index, points)
     is_boundary = val < 0
     brow = jnp.clip(-(val + 1), 0, max(index.cand.shape[0] - 1, 0))

@@ -22,7 +22,13 @@ belongs in a planner, not in caller code.
     the covering (``covering_boundary_fraction``).  For uniform traffic
     this is the expected fraction of points that pay candidate PIP; above
     ``HYBRID_BOUNDARY_FRAC`` the hybrid cascade's hierarchical PIP beats
-    the fast path's flat candidate lists.
+    the fast path's flat candidate lists;
+  * **recorded autotune** (``GeoIndexSet.tuning``, written by
+    ``geo_perf --autotune``) — when the artifact carries a measured
+    winner for this device kind, that measurement overrides the
+    threshold heuristics above: a recorded ``fast_onepass`` win routes
+    straight to the one-pass fused cascade at its tuned edge-pool block
+    size.
 
 Every decision appends a human-readable reason, so
 ``GeoEngine.explain()`` answers *why* a plan was chosen, and bench rows
@@ -33,7 +39,7 @@ it produced.  Thresholds are module constants on purpose: the ROADMAP's
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -71,7 +77,7 @@ class GeoPlan:
 
     strategy: str
     mode: str = "exact"
-    fused: bool = False
+    fused: Union[bool, str] = False   # False | True | "onepass"
     sharded: bool = False
     n_shards: int = 1
     device_kind: str = "cpu"
@@ -117,7 +123,11 @@ def explicit_plan(strategy: str, cfg, device_kind: str = None) -> GeoPlan:
     """The degenerate plan recording a caller-pinned strategy, so
     ``engine.explain()`` has one answer shape whether or not the planner
     ran."""
-    return GeoPlan(strategy=strategy, mode=cfg.mode, fused=cfg.fused,
+    return GeoPlan(strategy=strategy, mode=cfg.mode,
+                   # fast_onepass pins the one-pass kernel regardless of
+                   # what the config says — record what actually runs.
+                   fused=("onepass" if strategy == "fast_onepass"
+                          else cfg.fused),
                    device_kind=device_kind or jax.default_backend(),
                    auto=False, reasons=("explicit strategy request",))
 
@@ -125,12 +135,16 @@ def explicit_plan(strategy: str, cfg, device_kind: str = None) -> GeoPlan:
 def plan_for(cfg, *, covering=None, capabilities: Optional[dict] = None,
              n_points: Optional[int] = None,
              device_kind: Optional[str] = None,
-             n_devices: Optional[int] = None) -> GeoPlan:
+             n_devices: Optional[int] = None,
+             tuning: Optional[dict] = None) -> GeoPlan:
     """Choose an execution plan (see module docstring).
 
     ``capabilities=None`` means "planning a fresh build — anything is
     buildable from the census"; a dict (``GeoIndexSet.capabilities()``)
     constrains the plan to what an existing artifact can execute.
+    ``tuning`` is the artifact's recorded autotune block
+    (``GeoIndexSet.tuning``) — a measured winner there beats the
+    threshold heuristics.
     """
     device_kind = device_kind or jax.default_backend()
     n_devices = n_devices if n_devices is not None \
@@ -145,6 +159,17 @@ def plan_for(cfg, *, covering=None, capabilities: Optional[dict] = None,
 
     has_cell_index = fresh or covering is not None or caps.get("fast")
     can_cascade = fresh or caps.get("simple") or caps.get("census")
+    # The fast index's edge pool is usable when built OR buildable (an
+    # artifact carrying its census rebuilds pools on demand).
+    fast_pool_ok = (fresh or caps.get("fast_pool", False)
+                    or caps.get("census", False))
+    tune = dict(tuning or {})
+    # A recorded autotune win only transfers within its measurement
+    # context: same device kind (a CPU-recorded winner says nothing
+    # about TPU DMA behaviour, and vice versa).
+    tuned_onepass = (tune.get("winner") == "fast_onepass"
+                     and tune.get("device_kind", device_kind)
+                     == device_kind)
 
     # -- strategy -----------------------------------------------------------
     if not has_cell_index:
@@ -156,6 +181,13 @@ def plan_for(cfg, *, covering=None, capabilities: Optional[dict] = None,
         strategy = "simple"
         reasons.append(f"batch hint {n_points} < {SMALL_BATCH}: the "
                        f"covering BFS would dominate a one-shot batch")
+    elif tuned_onepass and cfg.mode == "exact" and fast_pool_ok:
+        strategy = "fast_onepass"
+        reasons.append(
+            f"recorded autotune on {device_kind!r} measured fast_onepass "
+            f"fastest (be={tune.get('be')}, "
+            f"{tune.get('pts_per_sec', 0):.3g} pts/s): measurement "
+            f"overrides threshold heuristics")
     elif bf is not None and bf >= HYBRID_BOUNDARY_FRAC and can_cascade:
         strategy = "hybrid"
         reasons.append(f"measured boundary fraction {bf:.3f} >= "
@@ -178,9 +210,11 @@ def plan_for(cfg, *, covering=None, capabilities: Optional[dict] = None,
 
     # -- fused kernel -------------------------------------------------------
     runs_candidate_pip = (strategy in ("simple", "hybrid")
-                          or (strategy == "fast" and mode == "exact"))
+                          or (strategy in ("fast", "fast_onepass")
+                              and mode == "exact"))
     pool_cap = {"simple": "simple_pool", "hybrid": "simple_pool",
-                "fast": "fast_pool"}[strategy]
+                "fast": "fast_pool",
+                "fast_onepass": "fast_pool"}[strategy]
     # A pool is usable when built OR buildable: an artifact that carries
     # its census rebuilds pools on demand (GeoIndexSet.ensure, which
     # from_index_set runs after planning) — a TPU cold start must not be
@@ -188,7 +222,24 @@ def plan_for(cfg, *, covering=None, capabilities: Optional[dict] = None,
     # never serialized.
     pool_available = (fresh or caps.get(pool_cap, False)
                       or caps.get("census", False))
-    if cfg.fused:
+    onepass_ok = (strategy in ("fast", "fast_onepass")
+                  and mode == "exact" and pool_available)
+    if strategy == "fast_onepass":
+        fused = "onepass"
+        reasons.append("fast_onepass pins the one-pass fused cascade "
+                       "kernel (kernels/cascade.py)")
+    elif cfg.fused == "onepass":
+        if onepass_ok:
+            fused = "onepass"
+            reasons.append("one-pass fused cascade requested by config")
+        else:
+            fused = bool(runs_candidate_pip and pool_available)
+            reasons.append(
+                "onepass requested but it needs the exact fast path with "
+                "an edge pool: "
+                + ("kept the two-kernel fused path" if fused
+                   else "dropped (no candidate PIP or no edge pool)"))
+    elif cfg.fused:
         fused = runs_candidate_pip and pool_available
         reasons.append("fused requested by config"
                        if fused else

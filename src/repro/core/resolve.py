@@ -197,6 +197,36 @@ class AssignResult:
         return cls(*children)
 
 
+def onepass_stats(flags: jnp.ndarray, nrest: jnp.ndarray,
+                  nskip: jnp.ndarray) -> dict:
+    """Stats dict for the one-pass fused cascade (ops.assign_cascade),
+    reproducing ``_pip_two_phase``'s accounting from the kernel's
+    per-point outputs so ``fast_onepass`` is counter-identical to
+    ``fast_exact`` whenever the two-phase caps are not overflowing:
+
+      * n_pip = every boundary point pays its slot-0 test, and each
+        slot-0 *miss* additionally counts all its valid slot-1..K-1
+        candidates — exactly the phase-2 ``real2 & (rest >= 0)`` sum;
+      * overflow / phase2_miss are structurally zero: the kernel walks
+        candidates per point with no compaction buffer to overflow (the
+        one-pass path is the *more* exact answer when the two-phase caps
+        are undersized — the counters make that visible rather than
+        papering over it);
+      * bbox_skips rides in the strategy's native breakdown only (extra
+        dict): candidate slots whose bbox rejected the point before any
+        edge DMA — the filter stage's measured win.
+    """
+    boundary = (flags & 1) == 1
+    slot0_hit = (flags & 2) == 2
+    n_boundary = jnp.sum(boundary.astype(jnp.int32))
+    n_pip = n_boundary + jnp.sum(
+        jnp.where(boundary & ~slot0_hit, nrest, 0))
+    return {"n_boundary": n_boundary, "n_pip": n_pip,
+            "overflow": jnp.zeros((), jnp.int32),
+            "phase2_miss": jnp.zeros((), jnp.int32),
+            "bbox_skips": jnp.sum(jnp.where(boundary, nskip, 0))}
+
+
 def first_k_candidates(mask: jnp.ndarray, k: int) -> jnp.ndarray:
     """Slots of the first min(k, C) set bits per row of a [R, C] mask
     (else -1); k is clamped so narrow candidate tables (tiny maps) work."""

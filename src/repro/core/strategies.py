@@ -1,7 +1,8 @@
 """Built-in mapping strategies as registered plugins (DESIGN.md §11).
 
-The four execution plans the engine ships — the paper's simple cascade
-(§III), the fast cell index (§IV), the hybrid interior/cascade split, and
+The execution plans the engine ships — the paper's simple cascade
+(§III), the fast cell index (§IV), its one-pass fused-cascade variant
+(kernels/cascade.py), the hybrid interior/cascade split, and
 the dispatch-routed Morton-sharded lookup — registered through
 ``core.registry`` exactly like a third-party strategy would be.  The
 engine holds no strategy-specific code at all: it resolves names via
@@ -13,6 +14,7 @@ which points need resolution and which candidates they bring.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -61,6 +63,32 @@ class FastStrategy(Strategy):
     def assign(self, indices, points, cfg) -> AssignResult:
         sid, cid, bid, st = fast_mod.assign_fast(
             indices.fast, points, cfg.fast_cfg())
+        return AssignResult(sid, cid, bid, GeoStats(
+            n_need=st["n_boundary"], n_pip=st["n_pip"],
+            overflow=st["overflow"], extra=st))
+
+
+@register_strategy("fast_onepass", needs=("fast",), needs_edge_pool=True)
+class FastOnepassStrategy(FastStrategy):
+    """The one-pass fused cascade (kernels/cascade.py): the whole
+    quantize -> cell lookup -> bbox filter -> PIP pipeline in a single
+    kernel with double-buffered edge-block DMA.  Semantically this is
+    ``fast`` with ``mode="exact", fused="onepass"`` pinned — registered
+    under its own name so the planner, benchmarks, and serving configs
+    can name the execution plan directly; assignments are bit-identical
+    to ``fast_exact`` (and its stats counters match outside the
+    two-phase path's capacity-overflow regime)."""
+
+    def pool_components(self, cfg):
+        # Always exact, always the in-kernel candidate walk: the edge
+        # pool is unconditionally required (and validated at build).
+        return ("fast",)
+
+    def assign(self, indices, points, cfg) -> AssignResult:
+        fcfg = dataclasses.replace(cfg.fast_cfg(), mode="exact",
+                                   fused="onepass")
+        sid, cid, bid, st = fast_mod.assign_fast(indices.fast, points,
+                                                 fcfg)
         return AssignResult(sid, cid, bid, GeoStats(
             n_need=st["n_boundary"], n_pip=st["n_pip"],
             overflow=st["overflow"], extra=st))

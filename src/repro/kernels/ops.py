@@ -18,10 +18,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import bbox as bbox_kernels
+from repro.kernels import cascade as cascade_kernels
 from repro.kernels import gather_pip as gather_pip_kernels
 from repro.kernels import pip as pip_kernels
 from repro.kernels import ref
-from repro.kernels.gather_pip import EdgePool, build_edge_pool  # noqa: F401
+from repro.kernels.gather_pip import (DEF_BE, EdgePool,  # noqa: F401
+                                      build_edge_pool)
 # (re-exported: ops is the one import surface strategy code uses)
 
 # A padding point guaranteed outside every bbox / polygon we generate.
@@ -101,6 +103,50 @@ def pip_candidates(points: jnp.ndarray, pids: jnp.ndarray, pool: EdgePool,
             first, nblk, points.astype(jnp.float32), pool.blocks,
             max_blocks=pool.max_blocks, interpret=(b == "interpret"))
     return (cross & 1).astype(jnp.bool_) & valid
+
+
+def assign_cascade(points: jnp.ndarray, quant: jnp.ndarray,
+                   cell_lo: jnp.ndarray, cell_hi: jnp.ndarray,
+                   cell_val: jnp.ndarray, top_start: jnp.ndarray,
+                   cand: jnp.ndarray, bbox: jnp.ndarray, pool: EdgePool, *,
+                   max_level: int, gbits: int, search_iters: int,
+                   backend: str | None = None):
+    """One-pass fused cascade: [N, 2] points -> (bid, flags, nrest,
+    nskip), each [N] i32 (kernels/cascade.py has the full encoding).
+
+    The whole quantize -> cell lookup -> bbox filter -> PIP pipeline runs
+    in one kernel (or its bit-exact ref oracle); no per-stage HBM
+    intermediates.  ``bbox`` is the [P, 4] (xmin, xmax, ymin, ymax)
+    table aligned with the pool's polygon ids.  Empty cell/candidate/
+    polygon tables are normalized here so both backends see identical
+    never-matching sentinels.
+    """
+    b = resolve_backend(backend)
+    if cand.shape[0] == 0 or cand.shape[1] == 0:
+        cand = jnp.full((1, max(cand.shape[1], 1)), -1, jnp.int32)
+    if cell_lo.shape[0] == 0:
+        # One unreachable row (lo > hi never brackets a code).
+        cell_lo = jnp.ones((1,), jnp.int32)
+        cell_hi = jnp.zeros((1,), jnp.int32)
+        cell_val = jnp.zeros((1,), jnp.int32)
+    first, count, blocks = pool.first, pool.count, pool.blocks
+    if pool.n_poly == 0:
+        first = jnp.zeros((1,), jnp.int32)
+        count = jnp.zeros((1,), jnp.int32)
+        bbox = jnp.array([[1.0, 0.0, 1.0, 0.0]], jnp.float32)  # empty box
+    else:
+        assert bbox.shape[0] == pool.n_poly, (bbox.shape, pool.n_poly)
+    iters = cascade_kernels.effective_iters(cell_lo.shape[0], gbits,
+                                            search_iters)
+    if b == "ref":
+        return ref.assign_cascade(
+            points, quant, cell_lo, cell_hi, cell_val, top_start, cand,
+            bbox, first, count, blocks, max_level=max_level, gbits=gbits,
+            search_iters=iters, max_blocks=pool.max_blocks)
+    return cascade_kernels.assign_cascade(
+        points, quant, cell_lo, cell_hi, cell_val, top_start, cand, bbox,
+        first, count, blocks, max_level=max_level, gbits=gbits,
+        search_iters=iters, interpret=(b == "interpret"))
 
 
 def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray,

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.cascade import OUTSIDE, morton
+
 
 def crossings_one(points: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
     """Crossing counts of N points against one shared edge table.
@@ -103,6 +105,90 @@ def pip_candidates(points: jnp.ndarray, first: jnp.ndarray,
                    max_blocks: int) -> jnp.ndarray:
     return (crossings_candidates(points, first, count, blocks, max_blocks)
             & 1).astype(jnp.bool_)
+
+
+def assign_cascade(points: jnp.ndarray, quant: jnp.ndarray,
+                   cell_lo: jnp.ndarray, cell_hi: jnp.ndarray,
+                   cell_val: jnp.ndarray, top_start: jnp.ndarray,
+                   cand: jnp.ndarray, bbox: jnp.ndarray,
+                   first: jnp.ndarray, count: jnp.ndarray,
+                   blocks: jnp.ndarray, *, max_level: int, gbits: int,
+                   search_iters: int, max_blocks: int):
+    """Oracle for the one-pass fused cascade (kernels/cascade.py):
+    vectorized jnp, op-for-op the kernel's per-point schedule — same
+    quantize arithmetic, same fixed-iteration cell search, same
+    slot-ordered bbox-gated candidate walk — so the two are bit-exact.
+
+    Inputs must be pre-normalized like the kernel's (``ops.assign_cascade``
+    does this): ``cand`` [B>=1, K>=1], ``search_iters`` already
+    ``effective_iters``-adjusted.  Returns (bid, flags, nrest, nskip),
+    each [N] i32 (see the kernel module docstring for the encoding).
+    """
+    n_cells = cell_lo.shape[0]
+    span = jnp.float32(1 << max_level)
+    fx = (points[:, 0].astype(jnp.float32) - quant[0]) * quant[2]
+    fy = (points[:, 1].astype(jnp.float32) - quant[1]) * quant[3]
+    in_ext = (fx >= 0.0) & (fx < span) & (fy >= 0.0) & (fy < span)
+    nmax = (1 << max_level) - 1
+    ix = jnp.clip(fx.astype(jnp.int32), 0, nmax)
+    iy = jnp.clip(fy.astype(jnp.int32), 0, nmax)
+    code = morton(ix, iy)
+
+    if gbits > 0:
+        shift = 2 * (max_level - gbits)
+        bucket = (code >> shift).astype(jnp.int32)
+        l = jnp.maximum(top_start[bucket] - 1, 0)
+        h = top_start[bucket + 1]
+    else:
+        l = jnp.zeros_like(code)
+        h = jnp.full_like(code, n_cells)
+    for _ in range(search_iters):
+        active = l < h
+        mid = (l + h) // 2
+        go_right = cell_lo[jnp.clip(mid, 0, n_cells - 1)] <= code
+        nl = jnp.where(active & go_right, mid + 1, l)
+        nh = jnp.where(active & ~go_right, mid, h)
+        l, h = nl, nh
+    cidx = jnp.clip(l - 1, 0, n_cells - 1)
+    in_cell = (cell_lo[cidx] <= code) & (code <= cell_hi[cidx]) & in_ext
+    v = jnp.where(in_cell, cell_val[cidx], jnp.int32(OUTSIDE))
+
+    boundary = (v < 0) & (v > jnp.int32(OUTSIDE))
+    brow = jnp.clip(-(v + 1), 0, cand.shape[0] - 1)
+    n_poly = first.shape[0]
+    px, py = points[:, 0].astype(jnp.float32), points[:, 1].astype(
+        jnp.float32)
+    best = jnp.full(points.shape[0], -1, jnp.int32)
+    slot0_hit = jnp.zeros(points.shape[0], bool)
+    nrest = jnp.zeros(points.shape[0], jnp.int32)
+    nskip = jnp.zeros(points.shape[0], jnp.int32)
+    for s in range(cand.shape[1]):
+        pid = cand[brow, s]
+        valid = boundary & (pid >= 0)
+        if s > 0:
+            nrest = nrest + valid.astype(jnp.int32)
+        attempt = valid & (best < 0)
+        safe = jnp.clip(pid, 0, n_poly - 1)
+        bb = bbox[safe]
+        inb = ((px > bb[:, 0]) & (px < bb[:, 1])
+               & (py > bb[:, 2]) & (py < bb[:, 3]))
+        do = attempt & inb
+        nskip = nskip + (attempt & ~inb).astype(jnp.int32)
+        nblk = jnp.where(do, count[safe], 0)
+        cross = crossings_candidates(points.astype(jnp.float32),
+                                     first[safe], nblk, blocks, max_blocks)
+        inside = do & ((cross & 1) == 1)
+        best = jnp.where(inside, pid, best)
+        if s == 0:
+            slot0_hit = inside
+
+    fb0 = cand[brow, 0]
+    fallback = jnp.where(fb0 >= 0, fb0, -1)
+    resolved = jnp.where(best >= 0, best, fallback)
+    bid = jnp.where(boundary, resolved, jnp.where(v >= 0, v, -1))
+    flags = (boundary.astype(jnp.int32)
+             | (slot0_hit.astype(jnp.int32) << 1))
+    return (bid.astype(jnp.int32), flags, nrest, nskip)
 
 
 def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray) -> jnp.ndarray:

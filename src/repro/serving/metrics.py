@@ -8,7 +8,9 @@ fraction), cache hit/miss traffic, queue depth, batch-fill ratio (valid
 rows / padded slots — how much of the bucket ladder's padding is waste),
 deadline-triggered flushes (``deadline_flushes`` — how often the
 ``max_delay_ms`` SLO clock, not the size trigger, forced a batch out),
-and request latency percentiles over a sliding sample window.
+request latency percentiles over a sliding sample window, and per-region
+index memory footprints (edge-pool bytes / block sizes — gauges set at
+server construction from ``GeoIndexSet.memory_footprint``).
 
 ``snapshot()`` renders the whole registry as one JSON-ready dict:
 
@@ -77,6 +79,15 @@ class ServerMetrics:
         uniformly across strategies)."""
         for key, value in stats.as_dict().items():
             self.inc(f"geo_{key}", value)
+
+    def observe_footprint(self, prefix: str, footprint: dict) -> None:
+        """Record an index artifact's device-memory footprint
+        (``GeoIndexSet.memory_footprint``: edge-pool bytes/blocks and
+        the chosen pool block size) as ``<prefix>``-namespaced gauges.
+        Set, not summed — the footprint is a property of the built
+        index, refreshed whenever the server re-observes it."""
+        for key, value in footprint.items():
+            self.set_gauge(f"{prefix}{key}", value)
 
     def observe_cache(self, snap: dict) -> None:
         """Absorb a HotCellCache snapshot.  Cache counters are absolute

@@ -191,6 +191,13 @@ class GeoServer:
         self.regions = [self._make_region(e, c)
                         for e, c in zip(engines, coverings)]
         self.metrics = ServerMetrics(self.cfg.latency_window)
+        # Surface each region's built index footprint (edge-pool bytes,
+        # chosen pool block size, ...) so operators see what the tile
+        # autotune actually costs in device memory.
+        for r_ix, region in enumerate(self.regions):
+            self.metrics.observe_footprint(
+                f"region{r_ix}_",
+                region.engine.indices.memory_footprint())
         self.batcher = MicroBatcher(self.cfg.buckets,
                                     self.cfg.max_queue_points,
                                     self.cfg.policy)
