@@ -49,10 +49,14 @@ def build_stream(n_total: int, hot_frac: float, seed: int = 11):
     ids).  Request sizes are log-uniform; ``hot_frac`` of requests draw
     their points from a 256-point hot pool (with replacement).
     ``hot_frac`` is clamped to [0, 0.9]: only non-hot requests consume
-    fresh points, so the loop needs a non-hot fraction to terminate."""
+    fresh points, so the loop needs a non-hot fraction to terminate.
+
+    ``seed`` drives BOTH the stream-shape rng and (offset, so the two
+    streams stay decorrelated) the point sample — one flag pins the
+    whole run for apples-to-apples bench comparisons."""
     hot_frac = min(max(hot_frac, 0.0), 0.9)
     rng = np.random.default_rng(seed)
-    xy, bid, *_ = common.sample_points(n_total, seed=13)
+    xy, bid, *_ = common.sample_points(n_total, seed=seed + 2)
     hot_n = min(256, n_total)
     hot_ix = rng.choice(n_total, hot_n, replace=False)
     requests, truths, used = [], [], 0
@@ -112,13 +116,15 @@ def main():
                     help="verify-sized run: small stream, small buckets")
     ap.add_argument("--hot", type=float, default=0.3,
                     help="fraction of requests hitting the hot pool")
+    ap.add_argument("--seed", type=int, default=11,
+                    help="rng seed for the request stream + point sample")
     args = ap.parse_args()
     n_total = SMOKE_N if args.smoke else N_POINTS
     buckets = (256, 1024, 4096) if args.smoke else (256, 1024, 4096, 16384)
 
     census = common.get_census().census
     cov = common.get_covering(9)
-    requests, truths = build_stream(n_total, args.hot)
+    requests, truths = build_stream(n_total, args.hot, seed=args.seed)
     print(f"{len(requests)} requests / "
           f"{sum(len(r) for r in requests)} points, hot={args.hot}"
           + (" [smoke]" if args.smoke else ""))
@@ -128,6 +134,7 @@ def main():
     run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "bench": "serve",
            "n_points": int(sum(len(r) for r in requests)),
            "n_requests": len(requests), "hot_frac": args.hot,
+           "seed": args.seed,
            "smoke": bool(args.smoke), "backend": jax.default_backend(),
            "strategies": results}
     n_runs = common.append_bench_run(run, OUT_PATH)

@@ -3,11 +3,13 @@
 
 Compares the latest run's ``fast_exact`` / ``fast_onepass`` points/sec
 against the trailing median of earlier runs at the same batch size, and
-WARNS on a >30 % regression.  Deliberately non-fatal by default: the
-bench rows come from shared CI machines whose load jitters, so a hard
-gate here would flake — the warning plus the accumulated trajectory is
-the review signal (``--strict`` upgrades warnings to exit 1 for local
-perf work).
+the latest ``serve_slo`` row's sustained ``qps_at_slo`` (load_perf's
+throughput-under-SLO metric) against the trailing median at the same
+load shape, and WARNS on a >30 % regression.  Deliberately non-fatal by
+default: the bench rows come from shared CI machines whose load jitters,
+so a hard gate here would flake — the warning plus the accumulated
+trajectory is the review signal (``--strict`` upgrades warnings to
+exit 1 for local perf work).
 
     PYTHONPATH=src python scripts/check_bench.py [--strict]
 """
@@ -59,6 +61,40 @@ def check_strategy(runs: list, strategy: str) -> tuple[str, bool]:
     return line, False
 
 
+def slo_shape(run: dict) -> tuple:
+    """The load-shape key serve_slo rows are comparable under: smoke
+    flag, replica count, arrival process, request size, and the SLO
+    itself (a row at a looser SLO is not a regression baseline)."""
+    return (run.get("smoke"), run.get("replicas"), run.get("arrival"),
+            run.get("request_size"), run.get("slo_ms"))
+
+
+def check_serve_slo(runs: list) -> tuple[str, bool]:
+    """(verdict line, regressed?) for load_perf's serve_slo rows:
+    ratchet on sustained qps_at_slo at the same load shape."""
+    rows = [(slo_shape(r), float(r.get("qps_at_slo") or 0.0))
+            for r in runs
+            if r.get("bench") == "load" and r.get("kind") == "serve_slo"]
+    if not rows:
+        return "serve_slo: no load_perf rows yet", False
+    shape, latest = rows[-1]
+    if latest <= 0:
+        return ("WARNING: serve_slo: latest run met the SLO at NO "
+                "tested QPS (qps_at_slo=0)", True)
+    prior = [q for s, q in rows[:-1] if s == shape and q > 0][-WINDOW:]
+    if not prior:
+        return (f"serve_slo: first row at shape {shape} "
+                f"({latest:.0f} qps) — no history to compare"), False
+    med = statistics.median(prior)
+    ratio = latest / med
+    line = (f"serve_slo: {latest:.0f} qps_at_slo vs trailing median "
+            f"{med:.0f} ({len(prior)} runs at shape {shape}, "
+            f"ratio {ratio:.2f})")
+    if ratio < 1.0 - THRESHOLD:
+        return (f"WARNING: {line} — >{THRESHOLD:.0%} regression", True)
+    return line, False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default=DEFAULT_PATH)
@@ -79,6 +115,9 @@ def main() -> int:
         line, bad = check_strategy(runs, strategy)
         print(f"check_bench: {line}")
         regressed = regressed or bad
+    line, bad = check_serve_slo(runs)
+    print(f"check_bench: {line}")
+    regressed = regressed or bad
     return 1 if (regressed and args.strict) else 0
 
 

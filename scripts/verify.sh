@@ -8,13 +8,16 @@
 #      seed baseline (scripts/tier1_baseline.json) and fails the verify
 #      on any regression — pytest's raw exit status is informational
 #      (the baseline's known model-stack failures are expected);
-#   3. benchmarks/geo_perf --smoke and benchmarks/serve_perf --smoke
-#      (run even on test failure: known-failing model-stack tests must
-#      not starve the bench record);
+#   3. benchmarks/geo_perf --smoke, benchmarks/serve_perf --smoke, and
+#      benchmarks/load_perf --smoke (sustained-QPS-at-SLO through the
+#      concurrent AsyncGeoServer front-end — the serve_slo row) — run
+#      even on test failure: known-failing model-stack tests must not
+#      starve the bench record;
 #   4. benchmarks/roofline --geo --smoke — achieved-vs-peak bandwidth
 #      rows for the geo kernels appended to the same trajectory, then
 #      scripts/check_bench.py (soft perf ratchet: warns, never fails,
-#      on a >30% points/sec regression vs the trailing median);
+#      on a >30% regression vs the trailing median — points/sec and
+#      qps_at_slo alike);
 #   5. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
 #      (the serving cold-start path) checked bit-identical.
 #
@@ -35,12 +38,15 @@ python -m benchmarks.geo_perf --smoke
 bench=$?
 python -m benchmarks.serve_perf --smoke
 serve_bench=$?
+python -m benchmarks.load_perf --smoke
+load_bench=$?
 python -m benchmarks.roofline --geo --smoke
 roofline=$?
 python scripts/check_bench.py   # soft ratchet: informational exit only
 python scripts/artifact_smoke.py
 smoke=$?
 [ "$bench" -eq 0 ] && bench=$serve_bench
+[ "$bench" -eq 0 ] && bench=$load_bench
 [ "$bench" -eq 0 ] && bench=$roofline
 [ "$bench" -eq 0 ] && bench=$smoke
 [ "$status" -eq 0 ] && status=$bench

@@ -1,19 +1,21 @@
-"""Streaming geo-assignment serving subsystem (DESIGN.md §10).
+"""Streaming geo-assignment serving subsystem (DESIGN.md §10, §14).
 
 Public surface:
 
-    from repro.serving import GeoServer, ServeConfig
+    from repro.serving import GeoServer, ServeConfig          # sync
+    from repro.serving import AsyncGeoServer, FrontendConfig  # concurrent
 
 plus the composable pieces for custom serving loops: ``MicroBatcher`` /
-``QueueFull`` (micro-batching + backpressure), ``HotCellCache`` /
-``CellTable`` (exact hot-cell shortcut), ``ServerMetrics`` (live
-counters / latency percentiles).
+``QueueFull`` (thread-safe micro-batching + backpressure),
+``HotCellCache`` / ``CellTable`` (exact hot-cell shortcut),
+``ServerMetrics`` (live counters / latency percentiles).
 """
 from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
                                    MicroBatcher, QueueFull, bucket_for,
                                    pad_points)
 from repro.serving.cache import (CellTable, HotCellCache, np_extent_mask,
                                  np_quantize_codes)
+from repro.serving.frontend import AsyncGeoServer, FrontendConfig
 from repro.serving.metrics import LatencyWindow, ServerMetrics
 from repro.serving.server import GeoServer, ServeConfig, ServeResult
 
@@ -22,4 +24,5 @@ __all__ = [
     "bucket_for", "pad_points", "CellTable", "HotCellCache",
     "np_extent_mask", "np_quantize_codes", "LatencyWindow",
     "ServerMetrics", "GeoServer", "ServeConfig", "ServeResult",
+    "AsyncGeoServer", "FrontendConfig",
 ]

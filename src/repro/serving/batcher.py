@@ -25,10 +25,22 @@ The batcher is deliberately dumb about *what* a request is: it queues
 (ticket, points) pairs and hands back ``MicroBatch`` objects whose
 ``parts`` say which slice of which ticket each batch row belongs to — the
 server owns result assembly, metrics, and caching.
+
+**Thread safety** (DESIGN.md §14): every public method runs under one
+internal condition variable, so N producer threads can race ``put``
+against a flusher's ``drain``/``requeue`` without losing or duplicating
+a ticket, and FIFO order survives a requeue under contention (the
+requeue's extendleft is atomic).  ``put(wait=True)`` turns the "block"
+policy's caller-must-flush handshake into a real block: the producer
+sleeps on the condition until a drain frees room — the async front-end's
+backpressure.  ``wait_for_work`` is the flusher side: sleep until the
+queue goes non-empty.  The single-threaded serving loop pays one
+uncontended lock acquire per call, which is noise next to a device batch.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Any, Optional
@@ -98,34 +110,66 @@ class MicroBatcher:
         # flush RE-ARMS it (see ``requeue``), so the deadline bounds the
         # wait since the last serve attempt, not since first arrival.
         self._oldest_ts: Optional[float] = None
+        # One condition guards every mutation: producers wait on it for
+        # room (``put(wait=True)``), the flusher waits on it for work
+        # (``wait_for_work``); drain/requeue notify both sides.
+        self._cond = threading.Condition()
 
     def __len__(self) -> int:
-        return len(self._q)
+        with self._cond:
+            return len(self._q)
 
     def oldest_age_s(self) -> float:
         """Seconds the oldest queued request has been waiting (0.0 when
-        the queue is empty)."""
-        if self._oldest_ts is None:
-            return 0.0
-        return time.perf_counter() - self._oldest_ts
+        the queue is empty).  Monotone non-decreasing while the queue
+        stays non-empty: later puts never reset the clock."""
+        with self._cond:
+            if self._oldest_ts is None:
+                return 0.0
+            return time.perf_counter() - self._oldest_ts
 
-    def put(self, ticket: Any, points: np.ndarray) -> bool:
+    def _has_room(self, n: int) -> bool:
+        # An empty queue always accepts (a single request larger than
+        # the bound must still be servable — it just flushes alone).
+        return (not self._q
+                or self.queued_points + n <= self.max_queue_points)
+
+    def put(self, ticket: Any, points: np.ndarray, *, wait: bool = False,
+            timeout: Optional[float] = None) -> bool:
         """Enqueue one request.  Returns False when the ``block`` policy
         wants the caller to flush first; raises QueueFull under ``shed``.
-        An empty queue always accepts (a single request larger than the
-        bound must still be servable — it just flushes alone)."""
+
+        ``wait=True`` (the threaded front-end's spelling of "block")
+        sleeps on the internal condition until a drain frees room instead
+        of returning False — returning False only if ``timeout`` elapses
+        first.  ``shed`` raises immediately either way: load-shedding
+        must not stall the producer."""
+        points = np.asarray(points, np.float32)
         n = len(points)
-        if self._q and self.queued_points + n > self.max_queue_points:
-            if self.policy == "shed":
-                raise QueueFull(
-                    f"queue holds {self.queued_points} points, request of "
-                    f"{n} exceeds max_queue_points={self.max_queue_points}")
-            return False
-        self._q.append((ticket, np.asarray(points, np.float32), 0))
-        self.queued_points += n
-        if self._oldest_ts is None:
-            self._oldest_ts = time.perf_counter()
-        return True
+        with self._cond:
+            if not self._has_room(n):
+                if self.policy == "shed":
+                    raise QueueFull(
+                        f"queue holds {self.queued_points} points, request "
+                        f"of {n} exceeds "
+                        f"max_queue_points={self.max_queue_points}")
+                if not wait:
+                    return False
+                if not self._cond.wait_for(lambda: self._has_room(n),
+                                           timeout):
+                    return False
+            self._q.append((ticket, points, 0))
+            self.queued_points += n
+            if self._oldest_ts is None:
+                self._oldest_ts = time.perf_counter()
+            self._cond.notify_all()        # wake a flusher waiting for work
+            return True
+
+    def wait_for_work(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is non-empty (True) or ``timeout``
+        elapses (False) — the flusher loop's idle sleep."""
+        with self._cond:
+            return self._cond.wait_for(lambda: bool(self._q), timeout)
 
     def requeue(self, entries) -> None:
         """Push (ticket, points, base_off) slices back to the FRONT of
@@ -135,17 +179,25 @@ class MicroBatcher:
         is by definition the oldest in the queue: the deadline clock
         restarts at the requeue (the original arrival time left with
         ``drain``), so a crash-looping flush still re-arms the deadline
-        rather than firing it on every retry."""
-        if entries and self._oldest_ts is None:
-            self._oldest_ts = time.perf_counter()
-        self._q.extendleft(reversed(entries))
-        self.queued_points += sum(len(p) for _, p, _ in entries)
+        rather than firing it on every retry.  Atomic under the batcher
+        lock, so concurrent puts can neither interleave into the requeued
+        run nor observe it half-inserted — FIFO order survives
+        contention."""
+        with self._cond:
+            if entries and self._oldest_ts is None:
+                self._oldest_ts = time.perf_counter()
+            self._q.extendleft(reversed(entries))
+            self.queued_points += sum(len(p) for _, p, _ in entries)
+            if entries:
+                self._cond.notify_all()
 
     def drain(self) -> list:
         """Coalesce every queued request, FIFO, into micro-batches of at
         most the top bucket.  Requests pack together until the top bucket
         is full; a request longer than the remaining room is split across
-        batches (its parts record the request-side offsets)."""
+        batches (its parts record the request-side offsets).  Atomic: a
+        put racing a drain lands either wholly in this drain's batches or
+        wholly in the queue for the next one — never split between."""
         top = self.buckets[-1]
         batches: list[MicroBatch] = []
         chunks: list[np.ndarray] = []
@@ -159,19 +211,21 @@ class MicroBatcher:
                     MicroBatch(np.concatenate(chunks, axis=0), parts))
             chunks, parts, fill = [], [], 0
 
-        while self._q:
-            ticket, pts, base = self._q.popleft()
-            off = 0
-            while off < len(pts):
-                take = min(len(pts) - off, top - fill)
-                if take == 0:
-                    close()
-                    continue
-                chunks.append(pts[off:off + take])
-                parts.append((ticket, base + off, fill, take))
-                fill += take
-                off += take
-        close()
-        self.queued_points = 0
-        self._oldest_ts = None
+        with self._cond:
+            while self._q:
+                ticket, pts, base = self._q.popleft()
+                off = 0
+                while off < len(pts):
+                    take = min(len(pts) - off, top - fill)
+                    if take == 0:
+                        close()
+                        continue
+                    chunks.append(pts[off:off + take])
+                    parts.append((ticket, base + off, fill, take))
+                    fill += take
+                    off += take
+            close()
+            self.queued_points = 0
+            self._oldest_ts = None
+            self._cond.notify_all()        # room freed: wake blocked puts
         return batches

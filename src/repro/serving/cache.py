@@ -30,10 +30,22 @@ The LRU holds only the hot subset: at production scale the full interior
 table is the 90 GiB device index — the host map is the small, traffic-
 selected shadow of it, with hit/miss/insert/evict accounting for the
 metrics registry.
+
+**Thread safety** (DESIGN.md §14): one RLock serializes
+``lookup``/``learn``/``snapshot``.  The compound LRU operations
+(probe-then-move_to_end, insert-then-evict) are not atomic at the
+OrderedDict level, so unlocked concurrent callers could over-evict past
+capacity, lose inserts, or corrupt the hit/miss counters (lost
+read-modify-write updates).  A *stale* entry is impossible by
+construction even without the lock — an interior cell's block id never
+changes — so the lock's job is purely structural integrity plus honest
+accounting.  Values are immutable ints: there is no torn-read risk once
+the dict itself is consistent.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 
 import numpy as np
@@ -85,13 +97,15 @@ class HotCellCache:
         self.table = table
         self.capacity = int(capacity)
         self._map: OrderedDict[int, int] = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.insertions = 0
         self.evictions = 0
 
     def __len__(self) -> int:
-        return len(self._map)
+        with self._lock:
+            return len(self._map)
 
     def lookup(self, codes: np.ndarray):
         """[N] codes -> (bid [N] i32 with -1 on miss, hit [N] bool).
@@ -99,41 +113,46 @@ class HotCellCache:
         and LRU-touched) once."""
         uniq, inv = np.unique(codes, return_inverse=True)
         ubid = np.full(len(uniq), -1, np.int32)
-        m = self._map
-        for i, code in enumerate(uniq.tolist()):
-            v = m.get(code)
-            if v is not None:
-                m.move_to_end(code)
-                ubid[i] = v
-                self.hits += 1
-            else:
-                self.misses += 1
+        with self._lock:
+            m = self._map
+            for i, code in enumerate(uniq.tolist()):
+                v = m.get(code)
+                if v is not None:
+                    m.move_to_end(code)
+                    ubid[i] = v
+                    self.hits += 1
+                else:
+                    self.misses += 1
         bid = ubid[inv]
         return bid, bid >= 0
 
     def learn(self, codes: np.ndarray) -> int:
         """Insert the interior-safe subset of ``codes`` (value = the
         owning block from the covering — the exact answer by the interior
-        invariant); LRU-evicts beyond capacity.  Returns insert count."""
+        invariant); LRU-evicts beyond capacity.  Returns insert count.
+        The insert-then-evict pair runs under the cache lock, so entries
+        never exceed capacity however many threads learn at once."""
         uniq = np.unique(codes)
         safe = self.table.interior_value(uniq)
         inserted = 0
-        m = self._map
-        for code, bid in zip(uniq.tolist(), safe.tolist()):
-            if bid < 0 or code in m:
-                continue
-            m[code] = bid
-            inserted += 1
-            if len(m) > self.capacity:
-                m.popitem(last=False)
-                self.evictions += 1
-        self.insertions += inserted
+        with self._lock:
+            m = self._map
+            for code, bid in zip(uniq.tolist(), safe.tolist()):
+                if bid < 0 or code in m:
+                    continue
+                m[code] = bid
+                inserted += 1
+                if len(m) > self.capacity:
+                    m.popitem(last=False)
+                    self.evictions += 1
+            self.insertions += inserted
         return inserted
 
     def snapshot(self) -> dict:
-        total = self.hits + self.misses
-        return {"entries": len(self._map), "capacity": self.capacity,
-                "hits": self.hits, "misses": self.misses,
-                "insertions": self.insertions,
-                "evictions": self.evictions,
-                "hit_rate": self.hits / total if total else 0.0}
+        with self._lock:
+            total = self.hits + self.misses
+            return {"entries": len(self._map), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "insertions": self.insertions,
+                    "evictions": self.evictions,
+                    "hit_rate": self.hits / total if total else 0.0}

@@ -22,10 +22,18 @@ server construction from ``GeoIndexSet.memory_footprint``).
 
 Scrapers diff counters between snapshots; the derived block is recomputed
 from counters at snapshot time so it is always self-consistent.
+
+**Thread safety** (DESIGN.md §14): the registry is written from submitter
+threads, the flusher, and every replica worker at once, so ``inc`` (a
+read-modify-write that would silently lose updates), gauge sets, and the
+latency window all run under one registry lock; ``snapshot`` takes the
+same lock so a scrape never sees a half-applied GeoStats fold.  The
+latency window has its own lock because it is exported standalone.
 """
 from __future__ import annotations
 
 import json
+import threading
 from collections import deque
 
 import numpy as np
@@ -34,22 +42,27 @@ import numpy as np
 class LatencyWindow:
     """Sliding window of the most recent N latency samples; percentiles
     are exact over the window (a serving-loop-friendly stand-in for a
-    streaming sketch)."""
+    streaming sketch).  Observe/snapshot are lock-guarded: percentiles
+    are taken over a stable copy, never a deque mid-append."""
 
     def __init__(self, window: int = 4096):
         self._samples: deque = deque(maxlen=int(window))
+        self._lock = threading.Lock()
         self.count = 0
 
     def observe(self, seconds: float) -> None:
-        self._samples.append(float(seconds))
-        self.count += 1
+        with self._lock:
+            self._samples.append(float(seconds))
+            self.count += 1
 
     def snapshot_ms(self) -> dict:
-        if not self._samples:
-            return {"count": 0, "p50": None, "p90": None, "p99": None,
-                    "max": None}
-        s = np.asarray(self._samples) * 1e3
-        return {"count": self.count,
+        with self._lock:
+            if not self._samples:
+                return {"count": 0, "p50": None, "p90": None, "p99": None,
+                        "max": None}
+            s = np.asarray(self._samples) * 1e3
+            count = self.count
+        return {"count": count,
                 "p50": float(np.percentile(s, 50)),
                 "p90": float(np.percentile(s, 90)),
                 "p99": float(np.percentile(s, 99)),
@@ -63,12 +76,17 @@ class ServerMetrics:
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, float] = {}
         self.latency = LatencyWindow(latency_window)
+        # RLock: observe_geo/observe_cache/observe_footprint compose the
+        # primitive inc/set under one holder.
+        self._lock = threading.RLock()
 
     def inc(self, name: str, value=1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + value
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + value
 
     def set_gauge(self, name: str, value) -> None:
-        self.gauges[name] = value
+        with self._lock:
+            self.gauges[name] = value
 
     def observe_latency(self, seconds: float) -> None:
         self.latency.observe(seconds)
@@ -76,9 +94,11 @@ class ServerMetrics:
     def observe_geo(self, stats) -> None:
         """Fold one micro-batch's GeoStats into ``geo_*`` counters
         (``as_dict`` flattens phase2_miss / overflow / boundary count
-        uniformly across strategies)."""
-        for key, value in stats.as_dict().items():
-            self.inc(f"geo_{key}", value)
+        uniformly across strategies).  One lock hold for the whole fold:
+        a concurrent snapshot sees all of a batch's counters or none."""
+        with self._lock:
+            for key, value in stats.as_dict().items():
+                self.inc(f"geo_{key}", value)
 
     def observe_footprint(self, prefix: str, footprint: dict) -> None:
         """Record an index artifact's device-memory footprint
@@ -86,16 +106,18 @@ class ServerMetrics:
         the chosen pool block size) as ``<prefix>``-namespaced gauges.
         Set, not summed — the footprint is a property of the built
         index, refreshed whenever the server re-observes it."""
-        for key, value in footprint.items():
-            self.set_gauge(f"{prefix}{key}", value)
+        with self._lock:
+            for key, value in footprint.items():
+                self.set_gauge(f"{prefix}{key}", value)
 
     def observe_cache(self, snap: dict) -> None:
         """Absorb a HotCellCache snapshot.  Cache counters are absolute
         (the cache owns them), so they are *set*, not summed — the server
         refreshes them on every snapshot without double-counting."""
-        for key in ("hits", "misses", "insertions", "evictions",
-                    "entries"):
-            self.counters[f"cache_{key}"] = snap[key]
+        with self._lock:
+            for key in ("hits", "misses", "insertions", "evictions",
+                        "entries"):
+                self.counters[f"cache_{key}"] = snap[key]
 
     # -- rendering ---------------------------------------------------------
 
@@ -113,10 +135,12 @@ class ServerMetrics:
         return d
 
     def snapshot(self) -> dict:
-        return {"counters": dict(self.counters),
-                "gauges": dict(self.gauges),
-                "derived": self._derived(),
-                "latency_ms": self.latency.snapshot_ms()}
+        with self._lock:
+            snap = {"counters": dict(self.counters),
+                    "gauges": dict(self.gauges),
+                    "derived": self._derived()}
+        snap["latency_ms"] = self.latency.snapshot_ms()
+        return snap
 
     def to_json(self, indent=None) -> str:
         return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

@@ -39,10 +39,13 @@ engine — padding is FAR-neutralized, coalescing never reorders results.
 With the cache on the same holds for every exact engine configuration
 (see cache.py for the interior-cell argument and the overflow caveat).
 
-The serving loop is synchronous and single-threaded by design — the unit
-of concurrency in this stack is the device batch, not the Python thread;
-an async front-end would own the socket and call ``enqueue``/``flush``/
-``poll`` on its event loop.
+This facade's serving loop is synchronous and single-threaded — the unit
+of concurrency here is the device batch.  The concurrent front-end is
+``frontend.AsyncGeoServer`` (DESIGN.md §14): it reuses this class's
+regions/batcher/metrics and the two-stage serve path below
+(``_prepare_batch`` — routing + cache, ordered; ``_complete_batch`` —
+engine assigns, dispatchable to replica workers), so sync and async
+serving share one code path and stay bit-identical.
 
 **Cold start**: ``GeoServer.from_artifact(path)`` serves a
 ``GeoIndexSet`` saved with ``indices.save(path)`` (core/artifact.py) —
@@ -52,6 +55,7 @@ and ``strategy="auto"`` replans for the current device.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional, Sequence, Union
 
@@ -107,10 +111,15 @@ class ServeResult:
 
 class _Ticket:
     """One in-flight request: preallocated result arrays filled as its
-    micro-batch parts complete (a request can span batches)."""
+    micro-batch parts complete (a request can span batches — and under
+    the async front-end those batches can complete on different replica
+    threads, so the remaining-count bookkeeping is lock-guarded and
+    ``fill`` reports completion atomically: exactly one filler sees
+    True).  Different parts write disjoint row ranges, so the array
+    writes themselves need no lock."""
 
     __slots__ = ("state", "county", "block", "region", "_remaining",
-                 "_t0", "latency_s")
+                 "_t0", "_lock", "latency_s")
 
     def __init__(self, n: int, t0: float):
         self.state = np.full(n, -1, np.int32)
@@ -119,21 +128,35 @@ class _Ticket:
         self.region = np.full(n, -1, np.int32)
         self._remaining = n
         self._t0 = t0
+        self._lock = threading.Lock()
         self.latency_s = 0.0 if n == 0 else None
 
-    def fill(self, req_off: int, length: int, sid, cid, bid, region):
+    def fill(self, req_off: int, length: int, sid, cid, bid,
+             region) -> bool:
+        """Write one served part; True exactly once, when this part
+        completes the request (the caller owning that True observes the
+        latency / resolves the future)."""
         sl = slice(req_off, req_off + length)
         self.state[sl] = sid
         self.county[sl] = cid
         self.block[sl] = bid
         self.region[sl] = region
-        self._remaining -= length
-        if self._remaining == 0:
+        with self._lock:
+            self._remaining -= length
+            if self._remaining != 0:
+                return False
             self.latency_s = time.perf_counter() - self._t0
+        self._completed()
+        return True
+
+    def _completed(self) -> None:
+        """Completion hook — the async front-end's future ticket resolves
+        its Future here; the sync ticket needs nothing."""
 
     @property
     def done(self) -> bool:
-        return self._remaining == 0
+        with self._lock:
+            return self._remaining == 0
 
     def result(self) -> ServeResult:
         if not self.done:
@@ -155,6 +178,11 @@ class _Region:
     county_parent: np.ndarray
     cache: Optional[HotCellCache]
     stats: Optional[GeoStats] = None      # merged across micro-batches
+    # Guards the stats merge — replica workers can finish two of this
+    # region's batches at once (GeoStats.merge is a sum, so merge order
+    # never matters, only merge atomicity).
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
 
     def host_parents_of(self, bid: np.ndarray):
         """(state, county) from block ids — cache hits only: hits are
@@ -167,6 +195,20 @@ class _Region:
         sid = np.where(cid >= 0,
                        self.county_parent[np.clip(cid, 0, None)], -1)
         return sid.astype(np.int32), cid.astype(np.int32)
+
+
+@dataclasses.dataclass
+class _BatchWork:
+    """One micro-batch between the host stage and the device stage:
+    routing + cache hits already resolved (in arrival order), engine
+    work still pending.  The async front-end's unit of dispatch."""
+
+    mb: MicroBatch
+    owner: np.ndarray               # [n] i32 owning region per point
+    sid: np.ndarray                 # [n] i32, cache hits filled, else -1
+    cid: np.ndarray
+    bid: np.ndarray
+    device: list                    # [(region_ix, sel rows, miss rows)]
 
 
 class GeoServer:
@@ -366,79 +408,117 @@ class GeoServer:
         return owner
 
     def _serve_batch(self, mb: MicroBatch) -> None:
+        self._complete_batch(self._prepare_batch(mb))
+
+    def _prepare_batch(self, mb: MicroBatch) -> "_BatchWork":
+        """HOST stage, run in arrival order: route every point to its
+        region, resolve cache hits, and *learn* the eligible miss codes
+        — learning needs only the covering table, never the engine
+        result, so it can (and must, for determinism) happen here.  The
+        async front-end runs this stage single-threaded in its flusher,
+        which is what keeps the cache's hit/miss/learn sequence — and
+        with it the set of device-served points and the merged GeoStats
+        — identical to the synchronous server's for the same request
+        order (DESIGN.md §14)."""
         pts = mb.points
         n = len(pts)
         owner = self._route(pts)
         sid = np.full(n, -1, np.int32)
         cid = np.full(n, -1, np.int32)
         bid = np.full(n, -1, np.int32)
+        device = []
         for r_ix, region in enumerate(self.regions):
             sel = np.nonzero(owner == r_ix)[0]
-            if sel.size:
-                rs, rc, rb = self._serve_region(region, pts[sel])
-                sid[sel], cid[sel], bid[sel] = rs, rc, rb
-        self.metrics.inc("batches")
-        self.metrics.inc("points_served", n)
-        for ticket, req_off, batch_off, length in mb.parts:
-            bsl = slice(batch_off, batch_off + length)
-            ticket.fill(req_off, length, sid[bsl], cid[bsl], bid[bsl],
-                        owner[bsl])
-            if ticket.done:
-                self.metrics.observe_latency(ticket.latency_s)
+            if not sel.size:
+                continue
+            rs, rc, rb, mi = self._host_stage(region, pts[sel])
+            sid[sel], cid[sel], bid[sel] = rs, rc, rb
+            if mi.size:
+                device.append((r_ix, sel, mi))
+        return _BatchWork(mb, owner, sid, cid, bid, device)
 
-    def _serve_region(self, region: _Region, pts: np.ndarray):
-        """Resolve ``pts`` against one region: hot-cell cache hits on the
-        host, everything else re-bucketed through the engine's padded
-        assign; returns (state, county, block) [m] i32 in input order.
-
-        Miss rows keep the engine's own state/county — NOT a re-derivation
-        from the block id: the cascade can resolve a point's state yet
-        lose it at the county/block level (bbox gap, capacity overflow),
-        and that partial answer must survive serving bit-identically.
-        Cache hits are interior cells (block always >= 0), so for them
-        the host parent tables give the same complete answer."""
+    def _host_stage(self, region: _Region, pts: np.ndarray):
+        """Cache lookup + learn for one region's slice of a batch;
+        returns (state, county, block, miss_rows) with hit rows filled
+        and miss rows -1.  Off-extent points stay misses: the engine
+        answers them -1, and their border-clipped codes must never touch
+        the cache.  Cache hits are interior cells (block always >= 0),
+        so the host parent tables give the complete exact answer."""
         m = len(pts)
         sid = np.full(m, -1, np.int32)
         cid = np.full(m, -1, np.int32)
         bid = np.full(m, -1, np.int32)
         miss = np.ones(m, bool)
-        codes = None
-        if region.cache is not None:
-            codes = np_quantize_codes(region.cache.table.quant,
-                                      region.cache.table.max_level, pts)
-            eligible = np_extent_mask(region.cache.table.quant,
-                                      region.cache.table.max_level, pts)
-            if eligible.any():
-                el = np.nonzero(eligible)[0]
-                cbid, hit = region.cache.lookup(codes[el])
-                hit_rows = el[hit]
-                bid[hit_rows] = cbid[hit]
-                sid[hit_rows], cid[hit_rows] = \
-                    region.host_parents_of(bid[hit_rows])
-                miss[hit_rows] = False
-            # Off-extent points stay misses: the engine answers them -1,
-            # and their border-clipped codes must never touch the cache.
+        if region.cache is None:
+            return sid, cid, bid, np.nonzero(miss)[0]
+        codes = np_quantize_codes(region.cache.table.quant,
+                                  region.cache.table.max_level, pts)
+        eligible = np_extent_mask(region.cache.table.quant,
+                                  region.cache.table.max_level, pts)
+        if eligible.any():
+            el = np.nonzero(eligible)[0]
+            cbid, hit = region.cache.lookup(codes[el])
+            hit_rows = el[hit]
+            bid[hit_rows] = cbid[hit]
+            sid[hit_rows], cid[hit_rows] = \
+                region.host_parents_of(bid[hit_rows])
+            miss[hit_rows] = False
         mi = np.nonzero(miss)[0]
-        if mi.size:
-            bucket = bucket_for(mi.size, self.cfg.buckets)
-            padded = pad_points(pts[mi], bucket)
-            # Slot accounting at the device edge: this is the padding the
-            # engine actually computes, post-cache and post-routing —
-            # batch_fill_ratio measures real ladder waste.
-            self.metrics.inc("padded_slots", bucket)
-            self.metrics.inc("valid_slots", mi.size)
-            res = region.engine.assign_padded(jnp.asarray(padded), mi.size)
-            sid[mi] = np.asarray(res.state)[:mi.size]
-            cid[mi] = np.asarray(res.county)[:mi.size]
-            bid[mi] = np.asarray(res.block)[:mi.size]
+        learnable = mi[eligible[mi]]
+        if learnable.size:
+            # The learned value comes from the covering's interior table,
+            # not the engine — exact by the interior invariant, so
+            # learning before the device assign changes nothing but
+            # makes the host stage self-contained.
+            region.cache.learn(codes[learnable])
+        return sid, cid, bid, mi
+
+    def _complete_batch(self, work: "_BatchWork") -> None:
+        """DEVICE stage + result scatter: engine-assign every region's
+        cache-miss rows, then fill tickets.  Order-free: the arrays it
+        writes are disjoint per part and the stats/metrics folds are
+        sums, so the async front-end dispatches whole ``_BatchWork``s to
+        replica workers round-robin and results stay bit-identical
+        whatever the completion order."""
+        pts = work.mb.points
+        for r_ix, sel, mi in work.device:
+            region = self.regions[r_ix]
+            rs, rc, rb = self._device_stage(region, pts[sel], mi)
+            work.sid[sel[mi]] = rs
+            work.cid[sel[mi]] = rc
+            work.bid[sel[mi]] = rb
+        self.metrics.inc("batches")
+        self.metrics.inc("points_served", len(pts))
+        for ticket, req_off, batch_off, length in work.mb.parts:
+            bsl = slice(batch_off, batch_off + length)
+            if ticket.fill(req_off, length, work.sid[bsl], work.cid[bsl],
+                           work.bid[bsl], work.owner[bsl]):
+                self.metrics.observe_latency(ticket.latency_s)
+
+    def _device_stage(self, region: _Region, pts: np.ndarray,
+                      mi: np.ndarray):
+        """One region's padded engine assign over its miss rows; returns
+        (state, county, block) [len(mi)] i32.
+
+        Miss rows keep the engine's own state/county — NOT a re-derivation
+        from the block id: the cascade can resolve a point's state yet
+        lose it at the county/block level (bbox gap, capacity overflow),
+        and that partial answer must survive serving bit-identically."""
+        bucket = bucket_for(mi.size, self.cfg.buckets)
+        padded = pad_points(pts[mi], bucket)
+        # Slot accounting at the device edge: this is the padding the
+        # engine actually computes, post-cache and post-routing —
+        # batch_fill_ratio measures real ladder waste.
+        self.metrics.inc("padded_slots", bucket)
+        self.metrics.inc("valid_slots", mi.size)
+        res = region.engine.assign_padded(jnp.asarray(padded), mi.size)
+        with region.lock:
             region.stats = res.stats if region.stats is None \
                 else region.stats.merge(res.stats)
-            self.metrics.observe_geo(res.stats)
-            if region.cache is not None:
-                learnable = mi[eligible[mi]]
-                if learnable.size:
-                    region.cache.learn(codes[learnable])
-        return sid, cid, bid
+        self.metrics.observe_geo(res.stats)
+        return (np.asarray(res.state)[:mi.size],
+                np.asarray(res.county)[:mi.size],
+                np.asarray(res.block)[:mi.size])
 
     # -- introspection -----------------------------------------------------
 

@@ -1,13 +1,89 @@
 """Shared fixtures: a small synthetic census + points with ground truth.
 
+Also provides two markers the concurrency battery relies on:
+
+* ``@pytest.mark.load`` — sustained-load / soak tests, excluded from the
+  default (tier-1) run; opt in with ``--run-load``.
+* ``@pytest.mark.timeout(seconds)`` — per-test wall-clock deadline so a
+  deadlocked threaded test fails fast instead of hanging the whole
+  suite.  Implemented in-tree (the pytest-timeout plugin is not in the
+  image): the test body runs on a daemon worker thread and the hook
+  fails the test if it does not finish in time.  Only apply it to tests
+  whose fixtures/teardown tolerate the test thread being abandoned —
+  the serving tests do (daemon threads, in-process state only).
+
 NOTE: device count must stay 1 here (the multi-pod dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 in its own process).
 Sharding tests spawn subprocesses with their own XLA_FLAGS.
 """
+import threading
+
 import numpy as np
 import pytest
 
 from repro.core.synth import build_synth_census
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-load", action="store_true", default=False,
+                     help="run @pytest.mark.load sustained-load tests")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "load: sustained-load test, skipped unless --run-load")
+    config.addinivalue_line(
+        "markers", "timeout(seconds): fail the test if its body runs "
+                   "longer than this (thread-based, no pytest-timeout)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-load"):
+        return
+    skip = pytest.mark.skip(reason="load test: needs --run-load")
+    for item in items:
+        if "load" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("timeout")
+    if marker is None:
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 60.0
+    outcome = []
+    orig = item.runtest
+
+    def run():
+        try:
+            orig()
+            outcome.append(None)
+        except BaseException as e:      # noqa: BLE001 — re-raised below
+            outcome.append(e)
+
+    # Replace runtest with a thread-joined wrapper; the surrounding
+    # pytest machinery (setup/teardown, reporting) stays on the main
+    # thread.  A daemon thread left behind on timeout cannot block
+    # interpreter exit.
+
+    def runtest_with_deadline():
+        t = threading.Thread(target=run, daemon=True,
+                             name=f"timeout:{item.name}")
+        t.start()
+        t.join(seconds)
+        if t.is_alive():
+            pytest.fail(f"test exceeded {seconds:g}s timeout "
+                        f"(likely deadlock)", pytrace=False)
+        if outcome and outcome[0] is not None:
+            raise outcome[0]
+
+    item.runtest = runtest_with_deadline
+    try:
+        yield
+    finally:
+        item.runtest = orig
 
 
 @pytest.fixture(scope="session")

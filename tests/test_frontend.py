@@ -1,0 +1,536 @@
+"""Concurrency battery for the AsyncGeoServer front-end (DESIGN.md §14):
+MicroBatcher put/drain/requeue races, HotCellCache eviction under
+contention, 8-thread bit-identity with the synchronous server (cache on
+and off, single- and multi-region), async backpressure (shed + block),
+retry/failure recovery, the deadline-flush loop, and lifecycle
+(drain/close/context manager).
+
+Every threaded test carries ``@pytest.mark.timeout`` (conftest's
+thread-based deadline) so a deadlock fails in seconds instead of
+hanging the suite; the sustained-load soak is ``@pytest.mark.load``
+and runs only under ``--run-load``.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, GeoEngine
+from repro.core.synth import build_synth_census
+from repro.serving import (AsyncGeoServer, CellTable, FrontendConfig,
+                           GeoServer, HotCellCache, MicroBatcher,
+                           QueueFull, ServeConfig)
+
+EXACT_CFG = EngineConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                         cap_block=1.0, cap_boundary=1.0, max_level=8)
+FUSED_CFG = EngineConfig(backend="ref", cap_state=1.0, cap_county=1.0,
+                         cap_block=1.0, cap_boundary=1.0, max_level=8,
+                         fused=True)
+BUCKETS = (64, 256, 1024)
+# Mixed request sizes: singletons, coalescing, and top-bucket splits.
+STREAM = (1, 7, 300, 555, 1024, 113)
+
+
+@pytest.fixture(scope="module")
+def engine(synth_small):
+    return GeoEngine.build(synth_small.census, "fast", FUSED_CFG)
+
+
+@pytest.fixture(scope="module")
+def two_regions_exact():
+    """Two regional engines with FULL caps: bit-identity across batch
+    compositions needs overflow-free engines (an overflowed candidate
+    list is the one batching-dependent code path)."""
+    scA = build_synth_census(seed=3, n_states=2, counties_per_state=2,
+                             blocks_per_county=4,
+                             extent=(-120.0, -100.0, 30.0, 45.0))
+    scB = build_synth_census(seed=4, n_states=2, counties_per_state=2,
+                             blocks_per_county=4,
+                             extent=(-100.0, -80.0, 30.0, 45.0))
+    return (scA, GeoEngine.build(scA.census, "fast", EXACT_CFG),
+            scB, GeoEngine.build(scB.census, "fast", EXACT_CFG))
+
+
+def _region_stats(server):
+    return [s.as_dict() if s is not None else None for s in server.stats]
+
+
+# -- MicroBatcher under contention (satellite 1) -----------------------------
+
+@pytest.mark.timeout(60)
+def test_batcher_stress_no_ticket_lost_or_duplicated():
+    """N producers race put(wait=True) against a flusher that drains and
+    sometimes requeues (simulated failed flush).  Every ticket's rows
+    must be served exactly once, contiguously, and a ticket's slices
+    must serve in request order even across a requeue (FIFO survives
+    contention)."""
+    b = MicroBatcher(buckets=BUCKETS, max_queue_points=512,
+                     policy="block")
+    n_producers, per_producer = 8, 40
+    total = n_producers * per_producer
+    sizes = {}                       # ticket -> request length
+    served = []                      # (ticket, req_off, length) in order
+    served_lock = threading.Lock()
+    done = threading.Event()
+    errors = []
+
+    def producer(pid):
+        rng = np.random.default_rng(100 + pid)
+        try:
+            for rix in range(per_producer):
+                n = int(rng.integers(1, 150))
+                t = (pid, rix)
+                sizes[t] = n         # keyed writes from distinct threads
+                pts = np.full((n, 2), pid, np.float32)
+                while not b.put(t, pts, wait=True, timeout=5.0):
+                    if done.is_set():
+                        raise RuntimeError("flusher died while blocked")
+        except Exception as e:       # pragma: no cover - failure path
+            errors.append(e)
+            done.set()
+
+    def flusher():
+        rng = np.random.default_rng(7)
+        requeues_left = 25
+        try:
+            while not done.is_set():
+                if not b.wait_for_work(timeout=0.05):
+                    continue
+                for mb in b.drain():
+                    if requeues_left > 0 and rng.uniform() < 0.3:
+                        requeues_left -= 1
+                        b.requeue([(t, mb.points[bo:bo + ln], ro)
+                                   for (t, ro, bo, ln) in mb.parts])
+                        continue
+                    with served_lock:
+                        served.extend((t, ro, ln)
+                                      for (t, ro, _, ln) in mb.parts)
+                with served_lock:
+                    n_tickets = len({t for t, _, _ in served})
+                if n_tickets == total and not len(b):
+                    done.set()
+        except Exception as e:       # pragma: no cover - failure path
+            errors.append(e)
+            done.set()
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(n_producers)]
+    threads.append(threading.Thread(target=flusher))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors, errors
+    assert done.is_set() and not any(t.is_alive() for t in threads)
+
+    # Exactly-once, gap-free coverage of every request.
+    coverage = {}
+    order_ok = True
+    last_off = {}
+    for t, ro, ln in served:
+        coverage.setdefault(t, []).append((ro, ln))
+        # FIFO through requeue: a ticket's slices serve in request
+        # order (offsets non-decreasing in the global serve sequence).
+        order_ok &= ro >= last_off.get(t, 0)
+        last_off[t] = ro
+    assert order_ok
+    assert len(coverage) == total
+    for t, slices in coverage.items():
+        slices.sort()
+        pos = 0
+        for ro, ln in slices:
+            assert ro == pos, f"gap/overlap in {t}: {slices}"
+            pos += ln
+        assert pos == sizes[t], f"short serve of {t}"
+    assert b.queued_points == 0
+
+
+@pytest.mark.timeout(30)
+def test_batcher_oldest_age_monotone_under_puts():
+    """The deadline clock never moves backwards while the queue stays
+    non-empty, whatever other producers do."""
+    b = MicroBatcher(buckets=BUCKETS)
+    b.put("anchor", np.zeros((2, 2), np.float32))
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            b.put(("c", i), np.zeros((3, 2), np.float32))
+            i += 1
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=churn)
+    t.start()
+    try:
+        last = 0.0
+        for _ in range(200):
+            age = b.oldest_age_s()
+            assert age >= last
+            last = age
+    finally:
+        stop.set()
+        t.join(5)
+    assert last > 0.0
+    b.drain()
+    assert b.oldest_age_s() == 0.0
+
+
+# -- HotCellCache under contention (satellite 2) -----------------------------
+
+@pytest.mark.timeout(60)
+def test_cache_eviction_under_contention():
+    """8 threads hammer learn/lookup on a capacity-16 cache: entries
+    never exceed capacity, every hit returns the exact interior value,
+    eviction happens, and no counter update is lost."""
+    n_codes = 256
+    table = CellTable(lo=np.arange(n_codes, dtype=np.int32),
+                      hi=np.arange(n_codes, dtype=np.int32),
+                      val=(np.arange(n_codes, dtype=np.int32) * 3 + 1),
+                      quant=np.zeros(4, np.float32), max_level=8)
+    cache = HotCellCache(table, capacity=16)
+    truth = table.interior_value(np.arange(n_codes, dtype=np.int32))
+    probes = [0] * 8                 # per-thread unique-probe counts
+    errors = []
+
+    def worker(wid):
+        rng = np.random.default_rng(wid)
+        try:
+            for _ in range(60):
+                codes = rng.integers(0, n_codes, 32).astype(np.int32)
+                cache.learn(codes)
+                assert len(cache) <= 16
+                bid, hit = cache.lookup(codes)
+                probes[wid] += len(np.unique(codes))
+                # A hit is exact or it is corruption.
+                np.testing.assert_array_equal(bid[hit], truth[codes][hit])
+                assert np.all(bid[~hit] == -1)
+        except Exception as e:       # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors, errors
+    assert len(cache) <= 16
+    assert cache.evictions > 0
+    assert cache.insertions - cache.evictions == len(cache)
+    # Lost read-modify-write updates would break this exact total.
+    assert cache.hits + cache.misses == sum(probes)
+    snap = cache.snapshot()
+    assert snap["entries"] == len(cache)
+    assert 0.0 <= snap["hit_rate"] <= 1.0
+
+
+# -- bit-identity under concurrency (satellite 3, acceptance criterion) ------
+
+def _compare_streams(sync_server, async_server, xy, request_sizes):
+    """Drive the identical request stream through both servers (sequential
+    prewarm first so the cache hit/miss sequence is deterministic), then
+    the measured phase concurrently through the async pipeline; assert
+    per-request ids and merged per-region GeoStats are identical."""
+    # Prewarm: one full sequential pass each.  Both servers coalesce the
+    # single request into the same micro-batch sequence, so the caches
+    # learn identically; afterwards the measured phase's hit/miss
+    # pattern is a pure function of each point.
+    sync_server.submit(xy)
+    async_server.submit(xy)
+
+    reqs, off = [], 0
+    for n in request_sizes:
+        reqs.append(xy[off:off + n])
+        off += n
+    sync_res = [sync_server.submit(r) for r in reqs]
+    futures = [async_server.submit_async(r) for r in reqs]
+    assert async_server.drain(timeout=60)
+    async_res = [f.result(timeout=5) for f in futures]
+
+    for i, (s, a) in enumerate(zip(sync_res, async_res)):
+        for field in ("state", "county", "block", "region"):
+            np.testing.assert_array_equal(
+                getattr(a, field), getattr(s, field),
+                err_msg=f"request {i} field {field}")
+    assert _region_stats(async_server) == _region_stats(sync_server)
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("cache", [False, True])
+def test_async_bit_identical_single_region(engine, points_small, cache):
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=cache)
+    sync_server = GeoServer(engine, cfg)
+    with AsyncGeoServer(engine, cfg,
+                        frontend=FrontendConfig(n_submitters=8,
+                                                n_replicas=3)) as srv:
+        _compare_streams(sync_server, srv, xy, STREAM)
+        if cache:
+            assert srv.cache_snapshot()["hits"] > 0
+    # And both match the engine's direct answer (transitively the whole
+    # concurrent pipeline is bit-identical to engine.assign).
+    direct = engine.assign(jnp.asarray(xy[:64]))
+    np.testing.assert_array_equal(
+        sync_server.submit(xy[:64]).block, np.asarray(direct.block))
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("cache", [False, True])
+def test_async_bit_identical_multi_region(two_regions_exact, cache):
+    scA, engA, scB, engB = two_regions_exact
+    xyA, *_ = scA.sample_points(np.random.default_rng(21), 900)
+    xyB, *_ = scB.sample_points(np.random.default_rng(22), 900)
+    inter = np.empty((1800, 2), np.float32)
+    inter[0::2], inter[1::2] = xyA, xyB
+    cfg = ServeConfig(buckets=BUCKETS, cache=cache)
+    sync_server = GeoServer([engA, engB], cfg)
+    with AsyncGeoServer([engA, engB], cfg,
+                        frontend=FrontendConfig(n_submitters=8,
+                                                n_replicas=2)) as srv:
+        _compare_streams(sync_server, srv, inter, (13, 301, 555, 700, 231))
+
+
+@pytest.mark.timeout(120)
+def test_async_concurrent_submitters_bit_identical(engine, points_small):
+    """The hardest interleaving: 8 client threads submitting racing
+    requests (arrival order nondeterministic).  Per-request results must
+    still equal the engine's direct per-request answer — the cache can
+    reorder hits/misses across clients but never change a value."""
+    xy, *_ = points_small
+    rng = np.random.default_rng(5)
+    reqs = []
+    for _ in range(48):
+        ix = rng.integers(0, len(xy), int(rng.integers(1, 400)))
+        reqs.append(xy[ix])
+    direct = [np.asarray(engine.assign(jnp.asarray(r)).block)
+              for r in reqs]
+    with AsyncGeoServer(engine, ServeConfig(buckets=BUCKETS, cache=True),
+                        frontend=FrontendConfig(n_submitters=8,
+                                                n_replicas=3)) as srv:
+        futures = [None] * len(reqs)
+        barrier = threading.Barrier(8)
+
+        def client(cid):
+            barrier.wait()
+            for i in range(cid, len(reqs), 8):
+                futures[i] = srv.submit_async(reqs[i])
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert srv.drain(timeout=60)
+        for i, fut in enumerate(futures):
+            np.testing.assert_array_equal(
+                fut.result(timeout=5).block, direct[i],
+                err_msg=f"request {i}")
+        snap = srv.snapshot()
+        assert snap["counters"]["requests"] == len(reqs)
+        assert snap["counters"]["points_served"] \
+            == sum(len(r) for r in reqs)
+
+
+# -- async backpressure ------------------------------------------------------
+
+@pytest.mark.timeout(30)
+def test_async_shed_fails_future_with_queue_full(engine, points_small):
+    """Under "shed", an overflowing request fails its future with
+    QueueFull instead of blocking anyone; serving continues."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, policy="shed",
+                      max_queue_points=64)
+    # One submitter serializes puts; a huge flush trigger + deadline
+    # parks the flusher so the overflow is deterministic.
+    fe = FrontendConfig(n_submitters=1, flush_points=1 << 20,
+                        max_delay_ms=10_000.0)
+    with AsyncGeoServer(engine, cfg, frontend=fe) as srv:
+        f1 = srv.submit_async(xy[:40])
+        f2 = srv.submit_async(xy[40:120])          # 40 + 80 > 64: shed
+        with pytest.raises(QueueFull):
+            f2.result(timeout=5)
+        srv.flush()
+        assert len(f1.result(timeout=5).block) == 40
+        snap = srv.snapshot()
+        assert snap["counters"]["shed_requests"] == 1
+        assert snap["counters"]["shed_points"] == 80
+
+
+@pytest.mark.timeout(30)
+def test_async_block_waits_for_room_and_completes(engine, points_small):
+    """Under "block", the overflowing submitter sleeps until the flusher
+    frees room — both requests complete, nothing is shed."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, policy="block",
+                      max_queue_points=64, max_delay_ms=2.0)
+    with AsyncGeoServer(engine, cfg,
+                        frontend=FrontendConfig(n_submitters=2)) as srv:
+        f1 = srv.submit_async(xy[:60])
+        f2 = srv.submit_async(xy[60:160])          # blocks, then proceeds
+        r1, r2 = f1.result(timeout=10), f2.result(timeout=10)
+        direct = np.asarray(engine.assign(jnp.asarray(xy[:160])).block)
+        np.testing.assert_array_equal(
+            np.concatenate([r1.block, r2.block]), direct)
+        assert srv.snapshot()["counters"].get("shed_requests", 0) == 0
+
+
+# -- failure recovery / retry budget -----------------------------------------
+
+class _FlakyAssign:
+    """Thread-safe assign_padded wrapper failing the first ``n_fail``
+    calls (replica threads race through it)."""
+
+    def __init__(self, engine, n_fail):
+        self._orig = engine.assign_padded
+        self._lock = threading.Lock()
+        self.n_fail = n_fail
+        self.calls = 0
+
+    def __call__(self, points, n_valid):
+        with self._lock:
+            self.calls += 1
+            fail = self.calls <= self.n_fail
+        if fail:
+            raise RuntimeError("device lost")
+        return self._orig(points, n_valid)
+
+
+@pytest.mark.timeout(30)
+def test_async_requeue_retries_failed_batch(engine, points_small,
+                                            monkeypatch):
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, max_delay_ms=2.0)
+    monkeypatch.setattr(engine, "assign_padded", _FlakyAssign(engine, 1))
+    with AsyncGeoServer(engine, cfg) as srv:
+        fut = srv.submit_async(xy[:100])
+        res = fut.result(timeout=10)               # survives one failure
+        snap = srv.snapshot()
+    monkeypatch.undo()
+    np.testing.assert_array_equal(
+        res.block, np.asarray(engine.assign(jnp.asarray(xy[:100])).block))
+    assert snap["counters"]["failed_flushes"] == 1
+    assert snap["counters"].get("failed_requests", 0) == 0
+
+
+@pytest.mark.timeout(30)
+def test_async_retry_budget_exhaustion_fails_future(engine, points_small,
+                                                    monkeypatch):
+    """A permanently poisoned batch fails the future with the engine's
+    exception after max_retries — no crash-loop — and the server keeps
+    serving afterwards."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, max_delay_ms=2.0)
+    flaky = _FlakyAssign(engine, 10 ** 9)
+    monkeypatch.setattr(engine, "assign_padded", flaky)
+    with AsyncGeoServer(engine, cfg,
+                        frontend=FrontendConfig(max_retries=1)) as srv:
+        fut = srv.submit_async(xy[:50])
+        with pytest.raises(RuntimeError, match="device lost"):
+            fut.result(timeout=10)
+        snap = srv.snapshot()
+        assert snap["counters"]["failed_requests"] == 1
+        # attempt 1 + retry 1 = exactly max_retries + 1 serve attempts
+        assert snap["counters"]["failed_flushes"] == 2
+        assert srv.batcher.queued_points == 0      # nothing crash-loops
+        monkeypatch.undo()
+        ok = srv.submit(xy[:10], timeout=10)       # server still healthy
+        np.testing.assert_array_equal(
+            ok.block, np.asarray(engine.assign(jnp.asarray(xy[:10])).block))
+
+
+# -- deadline loop / lifecycle -----------------------------------------------
+
+@pytest.mark.timeout(30)
+def test_async_deadline_loop_serves_trickle(engine, points_small):
+    """A lone small request is served by the background deadline flusher
+    with no flush()/drain() call from anyone."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, max_delay_ms=2.0)
+    with AsyncGeoServer(engine, cfg) as srv:
+        res = srv.submit_async(xy[:5]).result(timeout=10)
+        assert len(res.block) == 5
+        assert srv.snapshot()["counters"]["deadline_flushes"] >= 1
+
+
+@pytest.mark.timeout(30)
+def test_async_lifecycle_drain_close_empty(engine):
+    cfg = ServeConfig(buckets=BUCKETS, cache=False)
+    srv = AsyncGeoServer(engine, cfg)
+    assert srv.drain(timeout=1)                    # idle server: True
+    res = srv.submit(np.empty((0, 2), np.float32), timeout=5)
+    assert res.block.shape == (0,)
+    with pytest.raises(NotImplementedError):
+        srv.enqueue(np.zeros((3, 2), np.float32))
+    srv.close()
+    srv.close()                                    # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit_async(np.zeros((3, 2), np.float32))
+
+
+@pytest.mark.timeout(60)
+def test_async_close_serves_queued_work(engine, points_small):
+    """close() drains in-flight work before stopping: every accepted
+    future resolves."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=False, max_delay_ms=50.0)
+    srv = AsyncGeoServer(engine, cfg,
+                         frontend=FrontendConfig(n_submitters=4,
+                                                 n_replicas=2))
+    futures = [srv.submit_async(xy[i * 37:(i + 1) * 37])
+               for i in range(20)]
+    srv.close()
+    for fut in futures:
+        assert len(fut.result(timeout=5).block) == 37
+
+
+# -- sustained load (opt-in: --run-load) -------------------------------------
+
+@pytest.mark.load
+@pytest.mark.timeout(120)
+def test_sustained_load_soak(engine, points_small):
+    """~2s of closed-loop 8-client traffic: every future resolves, ids
+    match direct assign, points_in == points_served + shed."""
+    xy, *_ = points_small
+    cfg = ServeConfig(buckets=BUCKETS, cache=True, policy="shed",
+                      max_queue_points=1 << 15, max_delay_ms=2.0)
+    with AsyncGeoServer(engine, cfg,
+                        frontend=FrontendConfig(n_submitters=8,
+                                                n_replicas=3)) as srv:
+        srv.warm()
+        stop = time.perf_counter() + 2.0
+        results, errors = [], []
+        lock = threading.Lock()
+
+        def client(cid):
+            rng = np.random.default_rng(cid)
+            while time.perf_counter() < stop:
+                ix = rng.integers(0, len(xy), int(rng.integers(1, 256)))
+                try:
+                    res = srv.submit(xy[ix], timeout=30)
+                    with lock:
+                        results.append((ix, np.asarray(res.block)))
+                except QueueFull:
+                    pass
+                except Exception as e:  # pragma: no cover - failure path
+                    errors.append(e)
+                    return
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        assert not errors, errors
+        assert srv.drain(timeout=60)
+        assert len(results) > 50                   # actually sustained
+        direct = np.asarray(engine.assign(jnp.asarray(xy)).block)
+        for ix, got in results[::17]:              # spot-check identity
+            np.testing.assert_array_equal(got, direct[ix])
+        c = srv.snapshot()["counters"]
+        assert c["points_in"] == c["points_served"] \
+            + c.get("shed_points", 0)
