@@ -81,3 +81,20 @@ def timeit(fn, *args, repeats: int = 3):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def stage_breakdown(snap: dict) -> dict:
+    """Per-stage p50/p99 latency columns (ms) from a ServerMetrics
+    snapshot's ``stages`` block — the attributed-latency columns the
+    serve_slo/serve_* bench rows carry (DESIGN.md §15).  Missing stages
+    (e.g. a cache-less run never observed cache stages) report None so
+    rows stay schema-stable."""
+    stages = snap.get("stages", {})
+    out = {}
+    for stage, col in (("queue_wait", "queue_wait"),
+                       ("host_prepare", "host"),
+                       ("device_assign", "device")):
+        s = stages.get(stage) or {}
+        out[f"{col}_p50_ms"] = s.get("p50")
+        out[f"{col}_p99_ms"] = s.get("p99")
+    return out

@@ -220,6 +220,17 @@ def main():
     ap.add_argument("--clients", type=int, default=4,
                     help="closed-loop worker count")
     ap.add_argument("--request-size", type=int, default=32)
+    ap.add_argument("--trace", action="store_true",
+                    help="attach a Tracer and export Chrome-trace + span "
+                         "dumps beside the BENCH row (DESIGN.md §15)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="head-sampling rate for --trace (default 1.0 — "
+                         "the smoke validates complete timelines; use "
+                         "~0.01 under real load)")
+    ap.add_argument("--trace-out", default=os.path.join(
+                        os.path.dirname(OUT_PATH), "trace_load"),
+                    help="output prefix: writes <prefix>.chrome.json and "
+                         "<prefix>.spans.json")
     args = ap.parse_args()
 
     slo_ms = args.slo_ms if args.slo_ms is not None \
@@ -240,8 +251,12 @@ def main():
     scfg = ServeConfig(buckets=(256, 1024, 4096), policy="shed",
                        max_queue_points=1 << 15, max_delay_ms=2.0)
     fcfg = FrontendConfig(n_replicas=args.replicas, n_submitters=4)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(sample_rate=args.trace_sample)
     with AsyncGeoServer(engine, scfg, covering=cov,
-                        frontend=fcfg) as server:
+                        frontend=fcfg, tracer=tracer) as server:
         server.warm()
         # Prime the hot-cell cache so the searched steady state is the
         # warmed one (cold-cache trials would understate sustained QPS).
@@ -259,10 +274,27 @@ def main():
         snap = server.snapshot()
 
     hit_rate = snap["derived"]["cache_hit_rate"]
+    breakdown = common.stage_breakdown(snap)
     print(f"qps_at_slo (p99<={slo_ms}ms, shed<={args.max_shed}): "
           f"{qps_at_slo:8.1f} qps "
           f"(p50 {at['p50_ms']:.2f}ms p99 {at['p99_ms']:.2f}ms "
           f"shed {at['shed_rate']:.3f} hit {hit_rate:.2f})")
+    def _ms(v):
+        return "n/a" if v is None else f"{v:.3f}"
+    print(f"stage p99 (ms): queue_wait "
+          f"{_ms(breakdown['queue_wait_p99_ms'])} "
+          f"host {_ms(breakdown['host_p99_ms'])} "
+          f"device {_ms(breakdown['device_p99_ms'])}")
+    if tracer is not None:
+        os.makedirs(os.path.dirname(os.path.abspath(args.trace_out)),
+                    exist_ok=True)
+        chrome_path = args.trace_out + ".chrome.json"
+        n_ev = tracer.export_chrome(chrome_path)
+        n_sp = tracer.export_spans(args.trace_out + ".spans.json")
+        st = tracer.stats()
+        print(f"trace: {n_sp} spans ({n_ev} chrome events, "
+              f"{st['sampled']}/{st['started']} requests sampled, "
+              f"{st['dropped']} dropped) -> {os.path.normpath(chrome_path)}")
 
     run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "bench": "load",
            "kind": "serve_slo", "smoke": bool(args.smoke),
@@ -277,7 +309,8 @@ def main():
            "shed_rate": at["shed_rate"], "cache_hit_rate": hit_rate,
            "closed_loop_qps": closed["qps"],
            "closed_loop_p99_ms": closed["p99_ms"],
-           "n_clients": args.clients}
+           "n_clients": args.clients, "trace": bool(args.trace),
+           **breakdown}
     n_runs = common.append_bench_run(run, OUT_PATH)
     print(f"wrote {os.path.normpath(OUT_PATH)} ({n_runs} runs)")
 

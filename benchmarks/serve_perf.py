@@ -73,12 +73,20 @@ def build_stream(n_total: int, hot_frac: float, seed: int = 11):
     return requests, truths
 
 
-def bench_serving(census, cov, requests, truths, buckets):
+def bench_serving(census, cov, requests, truths, buckets,
+                  trace_sample=None, trace_out=None):
+    """Per-strategy serve run.  ``trace_sample`` attaches a fresh Tracer
+    per strategy (the span stream must attribute to one engine) and
+    exports ``<trace_out>_<name>.chrome.json`` beside the row."""
     results = {}
     for name, (strategy, ecfg) in SPECS.items():
+        tracer = None
+        if trace_sample is not None:
+            from repro.obs import Tracer
+            tracer = Tracer(sample_rate=trace_sample)
         engine = GeoEngine.build(census, strategy, ecfg, covering=cov)
         server = GeoServer(engine, ServeConfig(buckets=buckets),
-                           covering=cov)
+                           covering=cov, tracer=tracer)
         warm = server.warm()
         t0 = time.perf_counter()
         served = [server.submit(req).block for req in requests]
@@ -101,7 +109,14 @@ def bench_serving(census, cov, requests, truths, buckets):
             "overflow": c.get("geo_overflow", 0),
             "phase2_miss": c.get("geo_phase2_miss", 0),
             "warm_s": sum(warm.values()),
+            **common.stage_breakdown(snap),
         }
+        if tracer is not None and trace_out is not None:
+            os.makedirs(os.path.dirname(os.path.abspath(trace_out)),
+                        exist_ok=True)
+            n_ev = tracer.export_chrome(f"{trace_out}_{name}.chrome.json")
+            print(f"  trace: {n_ev} chrome events -> "
+                  f"{trace_out}_{name}.chrome.json")
         print(f"{name:24s}: {n / wall / 1e6:5.2f}M pts/s "
               f"p50 {lat['p50']:6.2f}ms p99 {lat['p99']:7.2f}ms "
               f"hit {d['cache_hit_rate']:.2f} "
@@ -118,6 +133,14 @@ def main():
                     help="fraction of requests hitting the hot pool")
     ap.add_argument("--seed", type=int, default=11,
                     help="rng seed for the request stream + point sample")
+    ap.add_argument("--trace", action="store_true",
+                    help="attach a per-strategy Tracer; exports Chrome "
+                         "traces beside the BENCH row")
+    ap.add_argument("--trace-sample", type=float, default=0.05,
+                    help="head-sampling rate for --trace")
+    ap.add_argument("--trace-out", default=os.path.join(
+                        os.path.dirname(OUT_PATH), "trace_serve"),
+                    help="output prefix for --trace exports")
     args = ap.parse_args()
     n_total = SMOKE_N if args.smoke else N_POINTS
     buckets = (256, 1024, 4096) if args.smoke else (256, 1024, 4096, 16384)
@@ -129,12 +152,15 @@ def main():
           f"{sum(len(r) for r in requests)} points, hot={args.hot}"
           + (" [smoke]" if args.smoke else ""))
 
-    results = bench_serving(census, cov, requests, truths, buckets)
+    results = bench_serving(
+        census, cov, requests, truths, buckets,
+        trace_sample=args.trace_sample if args.trace else None,
+        trace_out=args.trace_out if args.trace else None)
 
     run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "bench": "serve",
            "n_points": int(sum(len(r) for r in requests)),
            "n_requests": len(requests), "hot_frac": args.hot,
-           "seed": args.seed,
+           "seed": args.seed, "trace": bool(args.trace),
            "smoke": bool(args.smoke), "backend": jax.default_backend(),
            "strategies": results}
     n_runs = common.append_bench_run(run, OUT_PATH)

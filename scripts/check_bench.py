@@ -5,7 +5,10 @@ Compares the latest run's ``fast_exact`` / ``fast_onepass`` points/sec
 against the trailing median of earlier runs at the same batch size, and
 the latest ``serve_slo`` row's sustained ``qps_at_slo`` (load_perf's
 throughput-under-SLO metric) against the trailing median at the same
-load shape, and WARNS on a >30 % regression.  Deliberately non-fatal by
+load shape, and WARNS on a >30 % regression.  The attributed-latency
+columns ratchet too: a ``queue_wait_p99_ms`` that *grew* >30 % over
+the trailing median at the same load shape warns even when the
+end-to-end SLO still passes (DESIGN.md §15).  Deliberately non-fatal by
 default: the bench rows come from shared CI machines whose load jitters,
 so a hard gate here would flake — the warning plus the accumulated
 trajectory is the review signal (``--strict`` upgrades warnings to
@@ -63,10 +66,14 @@ def check_strategy(runs: list, strategy: str) -> tuple[str, bool]:
 
 def slo_shape(run: dict) -> tuple:
     """The load-shape key serve_slo rows are comparable under: smoke
-    flag, replica count, arrival process, request size, and the SLO
-    itself (a row at a looser SLO is not a regression baseline)."""
+    flag, replica count, arrival process, request size, the SLO
+    itself (a row at a looser SLO is not a regression baseline), and
+    whether the run traced — verify's 100%-sampled trace smoke pays a
+    real span-recording cost and must not ratchet against untraced
+    history (or vice versa)."""
     return (run.get("smoke"), run.get("replicas"), run.get("arrival"),
-            run.get("request_size"), run.get("slo_ms"))
+            run.get("request_size"), run.get("slo_ms"),
+            bool(run.get("trace")))
 
 
 def check_serve_slo(runs: list) -> tuple[str, bool]:
@@ -95,6 +102,34 @@ def check_serve_slo(runs: list) -> tuple[str, bool]:
     return line, False
 
 
+def check_queue_wait(runs: list) -> tuple[str, bool]:
+    """(verdict line, regressed?) for the attributed-latency columns
+    (DESIGN.md §15): warn when the latest serve_slo row's queue_wait
+    p99 grew >THRESHOLD over the trailing median at the same load
+    shape — the stage that grows when the flusher or replica pool falls
+    behind, caught before the end-to-end SLO breaks."""
+    rows = [(slo_shape(r), r.get("queue_wait_p99_ms"))
+            for r in runs
+            if r.get("bench") == "load" and r.get("kind") == "serve_slo"]
+    rows = [(s, float(q)) for s, q in rows if q is not None]
+    if not rows:
+        return "queue_wait: no attributed serve_slo rows yet", False
+    shape, latest = rows[-1]
+    prior = [q for s, q in rows[:-1] if s == shape and q > 0][-WINDOW:]
+    if not prior:
+        return (f"queue_wait: first attributed row at shape {shape} "
+                f"(p99 {latest:.3f}ms) — no history to compare"), False
+    med = statistics.median(prior)
+    ratio = latest / med
+    line = (f"queue_wait: p99 {latest:.3f}ms vs trailing median "
+            f"{med:.3f}ms ({len(prior)} runs at shape {shape}, "
+            f"ratio {ratio:.2f})")
+    if ratio > 1.0 + THRESHOLD:
+        return (f"WARNING: {line} — queue_wait p99 grew "
+                f">{THRESHOLD:.0%}", True)
+    return line, False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default=DEFAULT_PATH)
@@ -116,6 +151,9 @@ def main() -> int:
         print(f"check_bench: {line}")
         regressed = regressed or bad
     line, bad = check_serve_slo(runs)
+    print(f"check_bench: {line}")
+    regressed = regressed or bad
+    line, bad = check_queue_wait(runs)
     print(f"check_bench: {line}")
     regressed = regressed or bad
     return 1 if (regressed and args.strict) else 0

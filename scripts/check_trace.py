@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace file exported by the serving tracer.
+
+    python scripts/check_trace.py results/trace_load.chrome.json
+
+The --trace smoke in verify.sh runs load_perf at 100% sampling and then
+asserts, via this script, that the export is a *structurally valid*
+per-request timeline — the acceptance criterion for DESIGN.md §15:
+
+  * the file is JSON with a non-empty ``traceEvents`` list;
+  * every serve stage appears somewhere: ``request`` (the root),
+    ``queue_wait``, ``host_prepare``, ``device_assign``, ``merge``;
+  * grouping "X" events by ``args.trace_id``: every trace has exactly
+    one ``request`` root, and every child interval nests inside the
+    root's [ts, ts+dur] (small epsilon for float microseconds);
+  * every child's ``parent_id`` resolves to a span in the same trace.
+
+Exit 0 with a one-line summary on success; exit 1 with the first
+violation otherwise.
+"""
+import json
+import sys
+from collections import defaultdict
+
+# Host clocks are rebased to microseconds through floats; tolerate a
+# microsecond of rounding when checking containment.
+EPS_US = 1.0
+
+REQUIRED_STAGES = {"request", "queue_wait", "host_prepare",
+                   "device_assign", "merge"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(path: str) -> None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: no traceEvents")
+
+    spans = [e for e in events if e.get("ph") == "X"]
+    if not spans:
+        fail(f"{path}: no complete ('X') events")
+    names = {e["name"] for e in spans}
+    missing = REQUIRED_STAGES - names
+    if missing:
+        fail(f"{path}: required stages never recorded: {sorted(missing)}")
+
+    traces = defaultdict(list)
+    for e in spans:
+        args = e.get("args", {})
+        if "trace_id" not in args:
+            fail(f"event {e.get('name')!r} lacks args.trace_id")
+        traces[args["trace_id"]].append(e)
+
+    n_children = 0
+    for tid, evs in sorted(traces.items()):
+        roots = [e for e in evs if e["name"] == "request"]
+        if len(roots) != 1:
+            fail(f"trace {tid}: {len(roots)} 'request' roots (want 1)")
+        root = roots[0]
+        r0, r1 = root["ts"], root["ts"] + root["dur"]
+        ids = {e["args"]["span_id"] for e in evs}
+        for e in evs:
+            if e is root:
+                continue
+            n_children += 1
+            t0, t1 = e["ts"], e["ts"] + e["dur"]
+            if t0 < r0 - EPS_US or t1 > r1 + EPS_US:
+                fail(f"trace {tid}: child {e['name']!r} "
+                     f"[{t0:.1f}, {t1:.1f}]us outside root "
+                     f"[{r0:.1f}, {r1:.1f}]us")
+            parent = e["args"].get("parent_id")
+            if parent is None or parent not in ids:
+                fail(f"trace {tid}: child {e['name']!r} parent_id "
+                     f"{parent!r} does not resolve in its trace")
+    print(f"check_trace: OK: {len(traces)} request timelines, "
+          f"{n_children} child spans, stages {sorted(names)}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1])

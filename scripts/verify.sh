@@ -12,7 +12,11 @@
 #      benchmarks/load_perf --smoke (sustained-QPS-at-SLO through the
 #      concurrent AsyncGeoServer front-end — the serve_slo row) — run
 #      even on test failure: known-failing model-stack tests must not
-#      starve the bench record;
+#      starve the bench record.  load_perf runs with --trace at 100%
+#      sampling and scripts/check_trace.py validates the exported
+#      Chrome trace (per-request timeline reconstruction, §15);
+#      benchmarks/trace_overhead --smoke enforces the tracing overhead
+#      budget (tracer-off and 1%-sampled within 3% of untraced);
 #   4. benchmarks/roofline --geo --smoke — achieved-vs-peak bandwidth
 #      rows for the geo kernels appended to the same trajectory, then
 #      scripts/check_bench.py (soft perf ratchet: warns, never fails,
@@ -38,8 +42,15 @@ python -m benchmarks.geo_perf --smoke
 bench=$?
 python -m benchmarks.serve_perf --smoke
 serve_bench=$?
-python -m benchmarks.load_perf --smoke
+# --trace at 100% sampling: the smoke's Chrome trace must reconstruct
+# valid per-request timelines (scripts/check_trace.py, DESIGN.md §15).
+python -m benchmarks.load_perf --smoke --trace --trace-sample 1.0 \
+    --trace-out results/trace_load
 load_bench=$?
+python scripts/check_trace.py results/trace_load.chrome.json
+trace_check=$?
+python -m benchmarks.trace_overhead --smoke
+overhead=$?
 python -m benchmarks.roofline --geo --smoke
 roofline=$?
 python scripts/check_bench.py   # soft ratchet: informational exit only
@@ -47,6 +58,8 @@ python scripts/artifact_smoke.py
 smoke=$?
 [ "$bench" -eq 0 ] && bench=$serve_bench
 [ "$bench" -eq 0 ] && bench=$load_bench
+[ "$bench" -eq 0 ] && bench=$trace_check
+[ "$bench" -eq 0 ] && bench=$overhead
 [ "$bench" -eq 0 ] && bench=$roofline
 [ "$bench" -eq 0 ] && bench=$smoke
 [ "$status" -eq 0 ] && status=$bench

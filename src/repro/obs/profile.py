@@ -1,0 +1,87 @@
+"""Opt-in ``jax.profiler`` hooks for the serving stack (DESIGN.md §15).
+
+The tracer (obs/trace.py) attributes *host-observed* wall time; when a
+device stage itself needs opening up (which kernel, which fusion, how
+much HBM traffic), the JAX profiler is the right tool.  This module is
+the thin, failure-proof seam between the two:
+
+* ``device_annotation(name)`` — context manager wrapping
+  ``jax.profiler.TraceAnnotation``, so device-stage assigns show up as
+  named ranges in a captured device trace (TensorBoard / Perfetto).
+  ``GeoServer`` applies it around every padded assign when
+  ``ServeConfig.trace_device=True``.
+* ``start_profile(logdir)`` / ``stop_profile()`` — the capture pair
+  (``jax.profiler.start_trace``/``stop_trace``), exposed on
+  ``GeoServer`` so a load run can bracket its SLO trial with a device
+  trace capture.
+
+Every entry point degrades to a no-op (with a one-line warning once)
+if the profiler is unavailable or refuses — observability must never
+be able to take the serve path down.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+__all__ = ["device_annotation", "start_profile", "stop_profile",
+           "profiler_available"]
+
+_warned = set()
+_warn_lock = threading.Lock()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    with _warn_lock:
+        if key in _warned:
+            return
+        _warned.add(key)
+    print(f"obs.profile: {msg}")
+
+
+def profiler_available() -> bool:
+    try:
+        import jax.profiler  # noqa: F401
+        return hasattr(jax.profiler, "TraceAnnotation")
+    except Exception:                      # pragma: no cover - env-specific
+        return False
+
+
+@contextlib.contextmanager
+def device_annotation(name: str):
+    """Named profiler range around a device call; no-op when the
+    profiler is unavailable."""
+    try:
+        import jax.profiler
+        ctx = jax.profiler.TraceAnnotation(name)
+    except Exception:                      # pragma: no cover - env-specific
+        _warn_once("annotation", "jax.profiler.TraceAnnotation "
+                                 "unavailable — device annotations off")
+        yield
+        return
+    with ctx:
+        yield
+
+
+def start_profile(logdir: str) -> bool:
+    """Begin a device trace capture into ``logdir``; True if it
+    started.  Refusals (already active, missing profiler) warn once and
+    return False instead of raising."""
+    try:
+        import jax.profiler
+        jax.profiler.start_trace(logdir)
+        return True
+    except Exception as e:                 # pragma: no cover - env-specific
+        _warn_once("start", f"start_trace failed ({e}) — profiling off")
+        return False
+
+
+def stop_profile() -> bool:
+    """End the active capture; True if one was stopped."""
+    try:
+        import jax.profiler
+        jax.profiler.stop_trace()
+        return True
+    except Exception as e:                 # pragma: no cover - env-specific
+        _warn_once("stop", f"stop_trace failed ({e})")
+        return False

@@ -8,7 +8,12 @@ Public surface:
 plus the composable pieces for custom serving loops: ``MicroBatcher`` /
 ``QueueFull`` (thread-safe micro-batching + backpressure),
 ``HotCellCache`` / ``CellTable`` (exact hot-cell shortcut),
-``ServerMetrics`` (live counters / latency percentiles).
+``ServerMetrics`` (live counters / per-stage latency histograms /
+Prometheus-style exposition).  Observability (DESIGN.md §15) plugs in
+via ``repro.obs``: ``GeoServer(..., tracer=Tracer())`` records
+per-request span timelines, ``GeoServer.metrics_text()`` exposes the
+registry, and ``ServeConfig(trace_device=True)`` +
+``start_profile``/``stop_profile`` capture named device traces.
 """
 from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
                                    MicroBatcher, QueueFull, bucket_for,

@@ -63,6 +63,16 @@ def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
     return buckets[-1]
 
 
+def _stamp(ticket: Any) -> None:
+    """Tell a ticket it just (re-)entered the queue — the per-request
+    queue-wait clock (DESIGN.md §15).  Duck-typed so the batcher stays
+    ticket-agnostic: anything without ``mark_enqueued`` (tests use bare
+    strings) is silently skipped."""
+    mark = getattr(ticket, "mark_enqueued", None)
+    if mark is not None:
+        mark()
+
+
 def pad_points(points: np.ndarray, bucket: int) -> np.ndarray:
     """[n, 2] -> [bucket, 2] f32, zero-padded (the pad *value* is
     irrelevant — ``assign_padded`` rewrites pad rows to FAR)."""
@@ -159,6 +169,7 @@ class MicroBatcher:
                                            timeout):
                     return False
             self._q.append((ticket, points, 0))
+            _stamp(ticket)                 # queue-wait clock starts here
             self.queued_points += n
             if self._oldest_ts is None:
                 self._oldest_ts = time.perf_counter()
@@ -187,6 +198,8 @@ class MicroBatcher:
             if entries and self._oldest_ts is None:
                 self._oldest_ts = time.perf_counter()
             self._q.extendleft(reversed(entries))
+            for ticket, _, _ in entries:   # re-arm per-ticket wait clocks
+                _stamp(ticket)
             self.queued_points += sum(len(p) for _, p, _ in entries)
             if entries:
                 self._cond.notify_all()

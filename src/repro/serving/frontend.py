@@ -92,8 +92,8 @@ class _FutureTicket(_Ticket):
 
     __slots__ = ("future", "retries")
 
-    def __init__(self, n: int, t0: float):
-        super().__init__(n, t0)
+    def __init__(self, n: int, t0: float, trace=None):
+        super().__init__(n, t0, trace=trace)
         self.future: Future = Future()
         self.retries = 0
         if n == 0:                       # trivially complete, like sync
@@ -108,6 +108,8 @@ class _FutureTicket(_Ticket):
     def fail(self, exc: BaseException) -> None:
         if not self.future.done():
             self.future.set_exception(exc)
+        if self.trace is not None:       # shed/failed requests still close
+            self.trace.end(error=type(exc).__name__)  # — never orphans
 
 
 class AsyncGeoServer(GeoServer):
@@ -117,8 +119,9 @@ class AsyncGeoServer(GeoServer):
     stops at ``close()`` (or context-manager exit)."""
 
     def __init__(self, engines, cfg: Optional[ServeConfig] = None, *,
-                 covering=None, frontend: Optional[FrontendConfig] = None):
-        super().__init__(engines, cfg, covering=covering)
+                 covering=None, frontend: Optional[FrontendConfig] = None,
+                 tracer=None):
+        super().__init__(engines, cfg, covering=covering, tracer=tracer)
         f = frontend or FrontendConfig()
         if f.n_submitters < 1 or f.n_replicas < 1:
             raise ValueError(f"n_submitters and n_replicas must be >= 1, "
@@ -153,12 +156,12 @@ class AsyncGeoServer(GeoServer):
     def build(cls, census: CensusMap, strategy: str = "fast",
               cfg: Optional[ServeConfig] = None,
               engine_cfg: Optional[EngineConfig] = None,
-              frontend: Optional[FrontendConfig] = None
-              ) -> "AsyncGeoServer":
+              frontend: Optional[FrontendConfig] = None,
+              tracer=None) -> "AsyncGeoServer":
         """Single-region convenience, mirroring ``GeoServer.build``."""
         engine = GeoEngine.build(census, strategy,
                                  engine_cfg or EngineConfig())
-        return cls(engine, cfg, frontend=frontend)
+        return cls(engine, cfg, frontend=frontend, tracer=tracer)
 
     # -- client surface ----------------------------------------------------
 
@@ -171,7 +174,9 @@ class AsyncGeoServer(GeoServer):
         if self._stop.is_set():
             raise RuntimeError("AsyncGeoServer is closed")
         points = np.asarray(points, np.float32).reshape(-1, 2)
-        ticket = _FutureTicket(len(points), time.perf_counter())
+        t0 = time.perf_counter()
+        ticket = _FutureTicket(len(points), t0,
+                               trace=self._start_trace(t0))
         self.metrics.inc("requests")
         self.metrics.inc("points_in", len(points))
         with self._idle:
@@ -242,11 +247,19 @@ class AsyncGeoServer(GeoServer):
                        points: np.ndarray) -> None:
         """Submitter-pool body: blocking put with shutdown liveness."""
         try:
+            # The submit span's end is stamped BEFORE the put: once the
+            # put lands, the flusher may serve and close the trace ahead
+            # of this thread resuming, and a post-put timestamp could
+            # fall outside the root interval (child-nests-in-parent is
+            # the exported invariant).  The blocked-put wait itself is
+            # queue_wait's job, not submit's.
+            t_put = time.perf_counter()
             while not self.batcher.put(ticket, points, wait=True,
                                        timeout=self.fcfg.put_timeout_s):
                 if self._stop.is_set():
                     raise QueueFull("AsyncGeoServer closed while waiting "
                                     "for queue room")
+                t_put = time.perf_counter()
         except QueueFull as e:
             self.metrics.inc("shed_requests")
             self.metrics.inc("shed_points", len(points))
@@ -254,6 +267,9 @@ class AsyncGeoServer(GeoServer):
         except BaseException as e:        # never lose a future
             ticket.fail(e)
         else:
+            if ticket.trace is not None:  # submit = client call -> queued
+                ticket.trace.span("submit", ticket._t0, t_put,
+                                  n_points=len(points))
             self._update_queue_gauges()
 
     def _flush_loop(self) -> None:
@@ -330,12 +346,15 @@ class AsyncGeoServer(GeoServer):
             if id(t) not in bumped:
                 bumped.add(id(t))
                 t.retries += 1
+                t.attempt = t.retries     # later spans carry the attempt
                 if t.retries > self.fcfg.max_retries:
                     dead.append(t)
+                elif t.trace is not None:
+                    t.trace.event("retry", attempt=t.attempt)
             if t.retries <= self.fcfg.max_retries:
                 entries.append((t, work.mb.points[bo:bo + ln], ro))
         for t in dead:
             self.metrics.inc("failed_requests")
-            t.fail(exc)
+            t.fail(exc)                   # fail() also closes the trace
         if entries:
             self.batcher.requeue(entries)

@@ -71,6 +71,8 @@ from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
                                    MicroBatcher, QueueFull, bucket_for,
                                    pad_points)
 from repro.core.fast import np_extent_mask, np_quantize_codes
+from repro.obs import profile as obs_profile
+from repro.obs.trace import Tracer
 from repro.serving.cache import CellTable, HotCellCache
 from repro.serving.metrics import ServerMetrics
 
@@ -94,6 +96,12 @@ class ServeConfig:
     #                                       SLOs instead of waiting for
     #                                       the size trigger.  None =
     #                                       size/submit-driven only.
+    trace_device: bool = False         # wrap device-stage assigns in
+    #                                    jax.profiler.TraceAnnotation so
+    #                                    a captured device trace
+    #                                    (start_profile/stop_profile)
+    #                                    names each region/bucket range
+    #                                    (DESIGN.md §15).
 
 
 @dataclasses.dataclass
@@ -116,12 +124,20 @@ class _Ticket:
     threads, so the remaining-count bookkeeping is lock-guarded and
     ``fill`` reports completion atomically: exactly one filler sees
     True).  Different parts write disjoint row ranges, so the array
-    writes themselves need no lock."""
+    writes themselves need no lock.
+
+    Tracing rides on the ticket (DESIGN.md §15): ``trace`` is the
+    request's ``RequestTrace`` (None = unsampled — the whole request
+    records nothing), ``enqueue_ts`` is the queue-wait clock the
+    batcher re-stamps on every put/requeue (``mark_enqueued``), and
+    ``attempt`` counts failed-flush retries so a retried request's
+    spans stay distinguishable."""
 
     __slots__ = ("state", "county", "block", "region", "_remaining",
-                 "_t0", "_lock", "latency_s")
+                 "_t0", "_lock", "latency_s", "trace", "enqueue_ts",
+                 "attempt")
 
-    def __init__(self, n: int, t0: float):
+    def __init__(self, n: int, t0: float, trace=None):
         self.state = np.full(n, -1, np.int32)
         self.county = np.full(n, -1, np.int32)
         self.block = np.full(n, -1, np.int32)
@@ -130,6 +146,16 @@ class _Ticket:
         self._t0 = t0
         self._lock = threading.Lock()
         self.latency_s = 0.0 if n == 0 else None
+        self.trace = trace
+        self.enqueue_ts = t0
+        self.attempt = 0
+        if n == 0 and trace is not None:   # trivially complete
+            trace.end(t0, n_points=0)
+
+    def mark_enqueued(self) -> None:
+        """Batcher hook: the ticket just (re-)entered the queue — its
+        queue-wait interval starts now."""
+        self.enqueue_ts = time.perf_counter()
 
     def fill(self, req_off: int, length: int, sid, cid, bid,
              region) -> bool:
@@ -216,12 +242,17 @@ class GeoServer:
     docstring)."""
 
     def __init__(self, engines: Union[GeoEngine, Sequence[GeoEngine]],
-                 cfg: Optional[ServeConfig] = None, *, covering=None):
+                 cfg: Optional[ServeConfig] = None, *, covering=None,
+                 tracer: Optional[Tracer] = None):
         """``covering`` optionally provides the covering(s) the hot-cell
         cache needs (one, or one per engine) — for engines without one
         (strategy "simple") it is otherwise built from the engine's
-        census, a one-time host BFS."""
+        census, a one-time host BFS.  ``tracer`` (obs/trace.py) opts the
+        server into per-request span recording at the tracer's sample
+        rate; the per-stage latency histograms in ``metrics`` are
+        always on, tracer or not."""
         self.cfg = cfg or ServeConfig()
+        self.tracer = tracer
         if isinstance(engines, GeoEngine):
             engines = [engines]
         if not engines:
@@ -310,12 +341,18 @@ class GeoServer:
 
     # -- request path ------------------------------------------------------
 
+    def _start_trace(self, t0: float):
+        """Head-sampled RequestTrace for a new request (None = tracer
+        absent or this request not sampled)."""
+        return None if self.tracer is None else self.tracer.start_trace(t0)
+
     def enqueue(self, points) -> _Ticket:
         """Queue one request ([n, 2] lon/lat); returns its ticket.  Under
         the "shed" policy a full queue raises QueueFull (counted); under
         "block" it triggers an inline flush to make room."""
         points = np.asarray(points, np.float32).reshape(-1, 2)
-        ticket = _Ticket(len(points), time.perf_counter())
+        t0 = time.perf_counter()
+        ticket = _Ticket(len(points), t0, trace=self._start_trace(t0))
         self.metrics.inc("requests")
         self.metrics.inc("points_in", len(points))
         if len(points) == 0:
@@ -325,10 +362,15 @@ class GeoServer:
         except QueueFull:
             self.metrics.inc("shed_requests")
             self.metrics.inc("shed_points", len(points))
+            if ticket.trace is not None:   # shed atomically: root closes,
+                ticket.trace.end(error="QueueFull")  # no orphan children
             raise
         if not accepted:                   # "block": serve-now, then queue
             self.flush()
             self.batcher.put(ticket, points)
+        if ticket.trace is not None:
+            ticket.trace.span("submit", t0, time.perf_counter(),
+                              n_points=len(points))
         self._update_queue_gauges()
         # Deadline trigger rides the arrival path too: a trickle of tiny
         # requests must not wait for the size trigger (idle gaps are the
@@ -374,10 +416,11 @@ class GeoServer:
                 served += 1
         finally:
             if served < len(batches):
-                self.batcher.requeue(
-                    [(t, mb.points[bo:bo + ln], ro)
-                     for mb in batches[served:]
-                     for (t, ro, bo, ln) in mb.parts])
+                entries = [(t, mb.points[bo:bo + ln], ro)
+                           for mb in batches[served:]
+                           for (t, ro, bo, ln) in mb.parts]
+                self._note_retries(t for t, _, _ in entries)
+                self.batcher.requeue(entries)
                 self.metrics.inc("failed_flushes")
             if served and any(r.cache is not None for r in self.regions):
                 # Keep cache_* counters fresh so metrics.snapshot()/
@@ -390,6 +433,20 @@ class GeoServer:
         self.metrics.set_gauge("queue_depth_points",
                                self.batcher.queued_points)
         self.metrics.set_gauge("queue_depth_requests", len(self.batcher))
+
+    def _note_retries(self, tickets) -> None:
+        """Bump every distinct ticket's attempt counter and record a
+        linked ``retry`` span (parent = the request's root) — a retried
+        request's later spans carry the new attempt number, so its
+        timeline reads attempt-by-attempt."""
+        seen = set()
+        for t in tickets:
+            if id(t) in seen:
+                continue
+            seen.add(id(t))
+            t.attempt += 1
+            if t.trace is not None:
+                t.trace.event("retry", attempt=t.attempt)
 
     # -- serving internals -------------------------------------------------
 
@@ -419,50 +476,99 @@ class GeoServer:
         which is what keeps the cache's hit/miss/learn sequence — and
         with it the set of device-served points and the merged GeoStats
         — identical to the synchronous server's for the same request
-        order (DESIGN.md §14)."""
+        order (DESIGN.md §14).
+
+        Observability (§15): the stage interval feeds the
+        ``host_prepare``/``queue_wait`` histograms per batch, and every
+        *sampled* ticket in the batch gets queue_wait + host_prepare
+        spans (children: route, per-region cache_lookup/cache_learn) —
+        the whole batch shares one timing, each sampled request records
+        its own copy so per-request timelines stay self-contained."""
+        tp0 = time.perf_counter()
         pts = mb.points
         n = len(pts)
         owner = self._route(pts)
+        tr1 = time.perf_counter()
         sid = np.full(n, -1, np.int32)
         cid = np.full(n, -1, np.int32)
         bid = np.full(n, -1, np.int32)
         device = []
+        sub = [("route", tp0, tr1, {})]    # host_prepare sub-intervals
         for r_ix, region in enumerate(self.regions):
             sel = np.nonzero(owner == r_ix)[0]
             if not sel.size:
                 continue
-            rs, rc, rb, mi = self._host_stage(region, pts[sel])
+            rs, rc, rb, mi, rsub = self._host_stage(region, pts[sel],
+                                                    r_ix)
+            sub += rsub
             sid[sel], cid[sel], bid[sel] = rs, rc, rb
             if mi.size:
                 device.append((r_ix, sel, mi))
+        tp1 = time.perf_counter()
+        self.metrics.observe_stage("host_prepare", tp1 - tp0)
+        seen = set()
+        for ticket, _, _, _ in mb.parts:
+            if id(ticket) in seen:
+                continue
+            seen.add(id(ticket))
+            # Snapshot the clock once: a concurrent requeue (another
+            # part of this ticket failing on a replica) may restamp
+            # enqueue_ts past tp0 — clamp so the interval stays valid.
+            enq = min(ticket.enqueue_ts, tp0)
+            self.metrics.observe_stage("queue_wait", tp0 - enq)
+            trace = ticket.trace
+            if trace is None:
+                continue
+            attrs = {"attempt": ticket.attempt} if ticket.attempt else {}
+            trace.span("queue_wait", enq, tp0, **attrs)
+            host = trace.span("host_prepare", tp0, tp1, **attrs)
+            for name, s0, s1, sattrs in sub:
+                trace.span(name, s0, s1, parent=host, **sattrs, **attrs)
         return _BatchWork(mb, owner, sid, cid, bid, device)
 
-    def _host_stage(self, region: _Region, pts: np.ndarray):
+    def _host_stage(self, region: _Region, pts: np.ndarray, r_ix: int):
         """Cache lookup + learn for one region's slice of a batch;
-        returns (state, county, block, miss_rows) with hit rows filled
-        and miss rows -1.  Off-extent points stay misses: the engine
-        answers them -1, and their border-clipped codes must never touch
-        the cache.  Cache hits are interior cells (block always >= 0),
-        so the host parent tables give the complete exact answer."""
+        returns (state, county, block, miss_rows, sub_intervals) with
+        hit rows filled and miss rows -1.  Off-extent points stay
+        misses: the engine answers them -1, and their border-clipped
+        codes must never touch the cache.  Cache hits are interior
+        cells (block always >= 0), so the host parent tables give the
+        complete exact answer.
+
+        ``sub_intervals`` are (name, t0, t1, attrs) rows — the
+        cache_lookup/cache_learn children of the batch's host_prepare
+        span.  The monotonic ``cache_*_total`` counters increment here,
+        at the observation site (per-point hits, per-eligible-probe
+        misses, learn-returned insertions), so scrapers can diff them
+        across cache clears without phantom negative deltas."""
         m = len(pts)
         sid = np.full(m, -1, np.int32)
         cid = np.full(m, -1, np.int32)
         bid = np.full(m, -1, np.int32)
         miss = np.ones(m, bool)
         if region.cache is None:
-            return sid, cid, bid, np.nonzero(miss)[0]
+            return sid, cid, bid, np.nonzero(miss)[0], []
+        tl0 = time.perf_counter()
         codes = np_quantize_codes(region.cache.table.quant,
                                   region.cache.table.max_level, pts)
         eligible = np_extent_mask(region.cache.table.quant,
                                   region.cache.table.max_level, pts)
-        if eligible.any():
+        n_hit = 0
+        n_eligible = int(eligible.sum())
+        if n_eligible:
             el = np.nonzero(eligible)[0]
             cbid, hit = region.cache.lookup(codes[el])
             hit_rows = el[hit]
+            n_hit = int(hit_rows.size)
             bid[hit_rows] = cbid[hit]
             sid[hit_rows], cid[hit_rows] = \
                 region.host_parents_of(bid[hit_rows])
             miss[hit_rows] = False
+        tl1 = time.perf_counter()
+        self.metrics.inc("cache_hits_total", n_hit)
+        self.metrics.inc("cache_misses_total", n_eligible - n_hit)
+        sub = [("cache_lookup", tl0, tl1,
+                {"region": r_ix, "rows": m, "hits": n_hit})]
         mi = np.nonzero(miss)[0]
         learnable = mi[eligible[mi]]
         if learnable.size:
@@ -470,8 +576,12 @@ class GeoServer:
             # not the engine — exact by the interior invariant, so
             # learning before the device assign changes nothing but
             # makes the host stage self-contained.
-            region.cache.learn(codes[learnable])
-        return sid, cid, bid, mi
+            inserted = region.cache.learn(codes[learnable])
+            tn1 = time.perf_counter()
+            self.metrics.inc("cache_insertions_total", inserted)
+            sub.append(("cache_learn", tl1, tn1,
+                        {"region": r_ix, "inserted": inserted}))
+        return sid, cid, bid, mi, sub
 
     def _complete_batch(self, work: "_BatchWork") -> None:
         """DEVICE stage + result scatter: engine-assign every region's
@@ -479,21 +589,52 @@ class GeoServer:
         writes are disjoint per part and the stats/metrics folds are
         sums, so the async front-end dispatches whole ``_BatchWork``s to
         replica workers round-robin and results stay bit-identical
-        whatever the completion order."""
+        whatever the completion order.
+
+        Observability (§15): each region's padded assign feeds the
+        ``device_assign`` histogram and — since a ticket only fills
+        after *every* region of its batch served — each sampled ticket
+        records every device interval of the batch.  The completing
+        part additionally records the ``merge`` span and closes the
+        request's root."""
         pts = work.mb.points
+        dev = []                           # (t0, t1, attrs) per region
         for r_ix, sel, mi in work.device:
             region = self.regions[r_ix]
+            td0 = time.perf_counter()
             rs, rc, rb = self._device_stage(region, pts[sel], mi)
+            td1 = time.perf_counter()
+            self.metrics.observe_stage("device_assign", td1 - td0)
+            dev.append((td0, td1,
+                        {"region": r_ix, "rows": int(mi.size),
+                         "bucket": bucket_for(mi.size, self.cfg.buckets)}))
             work.sid[sel[mi]] = rs
             work.cid[sel[mi]] = rc
             work.bid[sel[mi]] = rb
         self.metrics.inc("batches")
         self.metrics.inc("points_served", len(pts))
+        if dev:
+            seen = set()
+            for ticket, _, _, _ in work.mb.parts:
+                if ticket.trace is None or id(ticket) in seen:
+                    continue
+                seen.add(id(ticket))
+                attrs = {"attempt": ticket.attempt} if ticket.attempt \
+                    else {}
+                for td0, td1, dattrs in dev:
+                    ticket.trace.span("device_assign", td0, td1,
+                                      **dattrs, **attrs)
+        tm0 = time.perf_counter()
         for ticket, req_off, batch_off, length in work.mb.parts:
             bsl = slice(batch_off, batch_off + length)
             if ticket.fill(req_off, length, work.sid[bsl], work.cid[bsl],
                            work.bid[bsl], work.owner[bsl]):
                 self.metrics.observe_latency(ticket.latency_s)
+                if ticket.trace is not None:
+                    done = time.perf_counter()
+                    ticket.trace.span("merge", tm0, done)
+                    ticket.trace.end(done, n_points=len(ticket.block))
+        self.metrics.observe_stage("merge", time.perf_counter() - tm0)
 
     def _device_stage(self, region: _Region, pts: np.ndarray,
                       mi: np.ndarray):
@@ -511,7 +652,17 @@ class GeoServer:
         # batch_fill_ratio measures real ladder waste.
         self.metrics.inc("padded_slots", bucket)
         self.metrics.inc("valid_slots", mi.size)
-        res = region.engine.assign_padded(jnp.asarray(padded), mi.size)
+        if self.cfg.trace_device:
+            # Named profiler range so a captured device trace
+            # (start_profile/stop_profile) attributes kernels to the
+            # serving stage that launched them (DESIGN.md §15).
+            with obs_profile.device_annotation(
+                    f"geo_device_assign/b{bucket}"):
+                res = region.engine.assign_padded(jnp.asarray(padded),
+                                                  mi.size)
+        else:
+            res = region.engine.assign_padded(jnp.asarray(padded),
+                                              mi.size)
         with region.lock:
             region.stats = res.stats if region.stats is None \
                 else region.stats.merge(res.stats)
@@ -545,3 +696,23 @@ class GeoServer:
         self.metrics.observe_cache(self.cache_snapshot())
         self._update_queue_gauges()
         return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of the live registry
+        (refreshes cache/queue gauges first) — ready to serve from a
+        ``/metrics`` endpoint (DESIGN.md §15)."""
+        if any(r.cache is not None for r in self.regions):
+            self.metrics.observe_cache(self.cache_snapshot())
+        self._update_queue_gauges()
+        return self.metrics.expose_text()
+
+    def start_profile(self, logdir: str) -> bool:
+        """Begin a JAX device-trace capture into ``logdir`` (True if it
+        started); pair with ``stop_profile``.  With
+        ``ServeConfig(trace_device=True)`` each padded assign shows up
+        as a named range in the capture."""
+        return obs_profile.start_profile(logdir)
+
+    def stop_profile(self) -> bool:
+        """End the active device-trace capture (True if one stopped)."""
+        return obs_profile.stop_profile()

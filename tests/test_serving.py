@@ -307,7 +307,9 @@ def test_cache_eviction_bounds_entries(engines, points_small):
     assert len(cache) <= 8
     assert cache.evictions > 0
     snap = server.snapshot()
-    assert snap["counters"]["cache_evictions"] == cache.evictions
+    # Cache absolutes are gauges (the cache owns them; a clear would
+    # rewind a counter) — see metrics.observe_cache.
+    assert snap["gauges"]["cache_evictions"] == cache.evictions
 
 
 def test_off_extent_points_not_cached_and_serve_minus_one(engines,
@@ -371,23 +373,33 @@ def test_metrics_snapshot_schema_and_json(engines, points_small):
     # The bare registry is already fresh after a flush (cache counters
     # are pushed, not pulled) — metrics.to_json() alone must be accurate.
     raw = server.metrics.snapshot()
-    assert raw["counters"]["cache_misses"] > 0
+    assert raw["gauges"]["cache_misses"] > 0      # absolutes live in gauges
     snap = server.snapshot()
     c, d = snap["counters"], snap["derived"]
     assert c["requests"] == len(STREAM)
     assert c["points_in"] == c["points_served"] == sum(STREAM)
     for key in ("geo_phase2_miss", "geo_overflow", "geo_n_boundary",
-                "geo_n_pip", "cache_hits", "cache_misses", "batches",
-                "padded_slots", "valid_slots"):
+                "geo_n_pip", "cache_hits_total", "cache_misses_total",
+                "batches", "padded_slots", "valid_slots"):
         assert key in c, key
+    for key in ("cache_hits", "cache_misses", "cache_evictions"):
+        assert key in snap["gauges"], key
+    # The serving-side monotonic twins count per-point traffic; the
+    # cache's own absolutes (gauges) count deduplicated probes — so
+    # traffic >= probes, and both are positive here.
+    assert c["cache_hits_total"] >= snap["gauges"]["cache_hits"] > 0
+    assert c["cache_misses_total"] >= snap["gauges"]["cache_misses"] > 0
     for key in ("cache_hit_rate", "batch_fill_ratio", "boundary_fraction",
                 "pip_per_point"):
         assert key in d, key
     assert 0 < d["batch_fill_ratio"] <= 1
     lat = snap["latency_ms"]
-    assert lat["count"] == len(STREAM)
+    assert lat["count_total"] == lat["count_window"] == len(STREAM)
     assert 0 <= lat["p50"] <= lat["p99"] <= lat["max"]
     assert snap["gauges"]["queue_depth_points"] == 0
+    for stage in ("queue_wait", "host_prepare", "device_assign", "merge",
+                  "request"):
+        assert snap["stages"][stage]["count"] > 0, stage
     json.loads(server.metrics.to_json())          # JSON-renderable
 
 
