@@ -1,0 +1,116 @@
+"""Windowed-analytics invariant smoke for scripts/verify.sh: drive a
+``WindowedAggregator`` with a deterministic injected clock and insist on
+the DESIGN.md §16 contracts — snapshot schema, conservation of observed
+events across panes, window finalization order, k-anonymity suppression
+(suppressed blocks carry counts internally but never surface in
+``top_k``/``as_dict``), and merge associativity of the window state.
+Fast (<~5 s) — this guards the serving analytics mount on every verify,
+not just when test_analytics.py runs.
+"""
+import sys
+
+import numpy as np
+
+from repro.analytics import (AnalyticsConfig, WindowState,
+                             WindowedAggregator)
+
+SNAP_KEYS = {"config", "observed", "off_map", "late_dropped",
+             "open_panes", "finalized_total", "finalized", "open"}
+WIN_KEYS = {"start", "end", "n_events", "active_blocks",
+            "suppressed_blocks", "k_anon", "top"}
+
+
+def fail(msg: str) -> int:
+    print(f"analytics smoke FAILED: {msg}")
+    return 1
+
+
+def main() -> int:
+    n_blocks = 64
+    tick = [0.0]
+    cfg = AnalyticsConfig(window_s=10.0, slide_s=5.0, k_anon=3,
+                          sketch_bits=1024, allowed_lateness_s=5.0,
+                          clock=lambda: tick[0])
+    agg = WindowedAggregator(n_blocks, cfg)
+    rng = np.random.default_rng(7)
+
+    # Block 0 gets heavy distinct traffic; block 1 gets 2 sources —
+    # under the k_anon floor, so it must be suppressed in every window.
+    observed = 0
+    for step in range(8):            # one batch per 5 s pane, ts 0..35
+        ts = float(step * 5)
+        bids = np.concatenate([np.zeros(20, np.int64),
+                               np.ones(4, np.int64),
+                               rng.integers(2, n_blocks, 40)])
+        srcs = np.concatenate([np.arange(20) + 1000 * step,
+                               np.array([7, 8, 7, 8]),
+                               rng.integers(0, 1 << 16, 40)])
+        observed += agg.observe(ts, bids, srcs)
+    agg.advance(100.0)               # watermark past everything
+
+    snap = agg.snapshot()
+    if set(snap) != SNAP_KEYS:
+        return fail(f"snapshot keys {sorted(snap)} != {sorted(SNAP_KEYS)}")
+    if snap["observed"] != observed:
+        return fail(f"observed {snap['observed']} != fed {observed}")
+    if snap["late_dropped"] != 0 or snap["off_map"] != 0:
+        return fail("unexpected late/off-map drops with in-order feed")
+    wins = snap["finalized"]
+    if not wins:
+        return fail("no finalized windows after watermark advance")
+    starts = [w["start"] for w in wins]
+    if starts != sorted(starts):
+        return fail(f"finalized windows out of order: {starts}")
+    for w in wins:
+        if set(w) != WIN_KEYS:
+            return fail(f"window keys {sorted(w)} != {sorted(WIN_KEYS)}")
+        if w["end"] - w["start"] != cfg.window_s:
+            return fail(f"window span {w['end'] - w['start']} != "
+                        f"{cfg.window_s}")
+    # Every event landed in-window, so full windows hold 2 panes x 64.
+    full = [w for w in wins if w["start"] >= 0.0 and w["end"] <= 40.0]
+    if not full or any(w["n_events"] != 128 for w in full):
+        return fail(f"full-window event counts "
+                    f"{[w['n_events'] for w in full]} != 128")
+    # Suppression: block 1 saw only 2 distinct sources < k_anon=3, so
+    # every published view must hide it while the raw WindowSnapshot
+    # keeps its counts intact.
+    raw = {(s.start, s.end): s for s in agg.finalized}
+    for w in full:
+        s = raw[(w["start"], w["end"])]
+        if not s.suppressed[1]:
+            return fail(f"block 1 (2 sources < k_anon=3) not suppressed "
+                        f"in window [{w['start']}, {w['end']})")
+        if s.suppressed[0]:
+            return fail("block 0 (20 distinct sources) wrongly "
+                        "suppressed")
+        if w["suppressed_blocks"] < 1:
+            return fail("suppressed_blocks count missing suppression")
+        if any(row["block"] == 1 for row in w["top"]):
+            return fail("suppressed block 1 leaked into published top")
+        if s.counts[1] != 8:         # raw counts stay intact internally
+            return fail(f"suppression zeroed raw counts "
+                        f"({s.counts[1]} != 8)")
+
+    # Merge associativity on raw window state.
+    states = []
+    for seed in range(3):
+        r = np.random.default_rng(seed)
+        s = WindowState(n_blocks, cfg.sketch_bits)
+        s.observe(r.integers(0, n_blocks, 100),
+                  r.integers(0, 1 << 16, 100))
+        states.append(s)
+    a, b, c = states
+    left, right = a.merge(b).merge(c), a.merge(b.merge(c))
+    if not (np.array_equal(left.counts, right.counts)
+            and np.array_equal(left.sketch.bitmap, right.sketch.bitmap)
+            and left.n_events == right.n_events):
+        return fail("window-state merge is not associative")
+
+    print(f"analytics smoke OK: {len(wins)} windows finalized, schema + "
+          f"conservation + suppression + merge associativity hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,11 +8,18 @@ throughput-under-SLO metric) against the trailing median at the same
 load shape, and WARNS on a >30 % regression.  The attributed-latency
 columns ratchet too: a ``queue_wait_p99_ms`` that *grew* >30 % over
 the trailing median at the same load shape warns even when the
-end-to-end SLO still passes (DESIGN.md §15).  Deliberately non-fatal by
-default: the bench rows come from shared CI machines whose load jitters,
-so a hard gate here would flake — the warning plus the accumulated
-trajectory is the review signal (``--strict`` upgrades warnings to
-exit 1 for local perf work).
+end-to-end SLO still passes (DESIGN.md §15).  The analytics rows
+(DESIGN.md §16) ratchet on ``agg_per_sec_fused`` — the fused
+assign→aggregate stage throughput — at the same (smoke, batch,
+n_blocks) shape, plus a hard check that the row's fused/unfused counts
+were bit-identical.  Deliberately non-fatal by default: the bench rows
+come from shared CI machines whose load jitters, so a hard gate here
+would flake — the warning plus the accumulated trajectory is the
+review signal (``--strict`` upgrades warnings to exit 1 for local perf
+work).  Every row family skips cleanly (prints, exits 0 even under
+``--strict``) when it has no rows or no trailing history at the latest
+row's shape — a fresh clone or a first-ever bench run must never fail
+the ratchet.
 
     PYTHONPATH=src python scripts/check_bench.py [--strict]
 """
@@ -130,6 +137,43 @@ def check_queue_wait(runs: list) -> tuple[str, bool]:
     return line, False
 
 
+def check_analytics(runs: list) -> tuple[str, bool]:
+    """(verdict line, regressed?) for analytics_perf rows: ratchet on
+    the fused assign→aggregate stage throughput at the same
+    (smoke, batch, n_blocks) shape, and flag any row whose fused and
+    unfused per-block counts were not bit-identical (the bench asserts
+    this itself, but a hand-edited or merged history should not pass
+    silently)."""
+    rows = [r for r in runs if r.get("bench") == "analytics"]
+    if not rows:
+        return "analytics: no bench rows yet", False
+    latest = rows[-1]
+    if not latest.get("counts_equal", True):
+        return ("WARNING: analytics: latest row's fused/unfused counts "
+                "were NOT bit-identical", True)
+    shape = (latest.get("smoke"), latest.get("batch"),
+             latest.get("n_blocks"))
+    rate = float(latest.get("agg_per_sec_fused") or 0.0)
+    if rate <= 0:
+        return "analytics: latest row has no agg_per_sec_fused", False
+    prior = [float(r.get("agg_per_sec_fused") or 0.0) for r in rows[:-1]
+             if (r.get("smoke"), r.get("batch"),
+                 r.get("n_blocks")) == shape
+             and float(r.get("agg_per_sec_fused") or 0.0) > 0][-WINDOW:]
+    if not prior:
+        return (f"analytics: first row at shape {shape} "
+                f"({rate/1e6:.1f}M agg/s fused) — no history to "
+                f"compare"), False
+    med = statistics.median(prior)
+    ratio = rate / med
+    line = (f"analytics: {rate/1e6:.1f}M agg/s fused vs trailing median "
+            f"{med/1e6:.1f}M ({len(prior)} runs at shape {shape}, "
+            f"ratio {ratio:.2f})")
+    if ratio < 1.0 - THRESHOLD:
+        return (f"WARNING: {line} — >{THRESHOLD:.0%} regression", True)
+    return line, False
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path", nargs="?", default=DEFAULT_PATH)
@@ -154,6 +198,9 @@ def main() -> int:
     print(f"check_bench: {line}")
     regressed = regressed or bad
     line, bad = check_queue_wait(runs)
+    print(f"check_bench: {line}")
+    regressed = regressed or bad
+    line, bad = check_analytics(runs)
     print(f"check_bench: {line}")
     regressed = regressed or bad
     return 1 if (regressed and args.strict) else 0

@@ -22,8 +22,15 @@
 #      scripts/check_bench.py (soft perf ratchet: warns, never fails,
 #      on a >30% regression vs the trailing median — points/sec and
 #      qps_at_slo alike);
-#   5. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
-#      (the serving cold-start path) checked bit-identical.
+#   5. benchmarks/analytics_perf --smoke — fused vs unfused per-block
+#      aggregation (bit-identity asserted in-bench) + windowed
+#      streaming throughput rows appended to the same trajectory
+#      (DESIGN.md §16);
+#   6. scripts/artifact_smoke.py — GeoIndexSet save/load round trip
+#      (the serving cold-start path) checked bit-identical — and
+#      scripts/analytics_smoke.py — windowed-analytics snapshot schema,
+#      event conservation, k-anonymity suppression, and window-state
+#      merge associativity under a deterministic injected clock.
 #
 # Exit status: the baseline gate's verdict wins; bench/smoke failures
 # surface only when the gate passed.
@@ -53,14 +60,20 @@ python -m benchmarks.trace_overhead --smoke
 overhead=$?
 python -m benchmarks.roofline --geo --smoke
 roofline=$?
+python -m benchmarks.analytics_perf --smoke
+analytics_bench=$?
 python scripts/check_bench.py   # soft ratchet: informational exit only
 python scripts/artifact_smoke.py
 smoke=$?
+python scripts/analytics_smoke.py
+analytics_smoke=$?
 [ "$bench" -eq 0 ] && bench=$serve_bench
 [ "$bench" -eq 0 ] && bench=$load_bench
 [ "$bench" -eq 0 ] && bench=$trace_check
 [ "$bench" -eq 0 ] && bench=$overhead
 [ "$bench" -eq 0 ] && bench=$roofline
+[ "$bench" -eq 0 ] && bench=$analytics_bench
 [ "$bench" -eq 0 ] && bench=$smoke
+[ "$bench" -eq 0 ] && bench=$analytics_smoke
 [ "$status" -eq 0 ] && status=$bench
 exit $status

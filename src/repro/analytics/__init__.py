@@ -1,0 +1,23 @@
+"""GeoAnalytics: per-block aggregation + windowed streaming analytics
+(DESIGN.md §16).
+
+Three layers: segment-reduce kernels (``repro.kernels.segment`` /
+``ops.segment_reduce``), batch aggregation (``BlockAggregator``),
+windowed streaming state (``WindowedAggregator``).  The serving layer
+mounts the windowed layer behind ``ServeConfig(analytics=...)``.
+"""
+from repro.analytics.aggregate import BlockAggregator
+from repro.analytics.sketch import DEF_BITS, DistinctSketch, splitmix64
+from repro.analytics.window import (AnalyticsConfig, WindowedAggregator,
+                                    WindowSnapshot, WindowState)
+
+__all__ = [
+    "AnalyticsConfig",
+    "BlockAggregator",
+    "DEF_BITS",
+    "DistinctSketch",
+    "WindowSnapshot",
+    "WindowState",
+    "WindowedAggregator",
+    "splitmix64",
+]

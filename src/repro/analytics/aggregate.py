@@ -1,0 +1,163 @@
+"""Per-block batch aggregation on top of the segment-reduce kernels
+(DESIGN.md §16).
+
+``BlockAggregator`` is the stateless batch layer of the analytics
+subsystem: it turns assigned block ids (from any ``GeoEngine``
+strategy) into per-block statistics —
+
+  * **occupancy counts** (host ``np.bincount`` or device
+    ``ops.segment_reduce``, bit-identical);
+  * **crowding density** = counts / block shoelace area
+    (``geometry.polygon_areas``);
+  * **weighted composite indices** (HVI-style): z-score per-block
+    attribute columns across blocks, then blend with caller weights —
+    the heat-vulnerability-index pattern of the census-block mapping
+    literature;
+  * a **fused assign→aggregate** path: the aggregation prologue is
+    traced into the engine's assign program (invalid ids parked at
+    ``n_blocks`` in the jit epilogue — XLA fuses the ``where`` into the
+    existing kernels for free), and the reduction consumes the
+    resulting id buffer without a host round trip: on TPU via the
+    segment kernels (``ops.segment_counts``), on the CPU backend via a
+    zero-copy dlpack view of the XLA buffer — no ``np.asarray`` copy,
+    no validity mask, no fancy-index compaction, just one ``bincount``
+    over pre-parked ids.  Counts are integer accumulations, so the
+    fused path is bit-identical to the unfused
+    assign → host-materialize → filter → bincount path by construction;
+    what fusion removes is the per-batch materialization work (and, on
+    accelerators, the [N] device→host transfer).
+
+Streaming/windowed state lives in window.py; this module never holds
+state between calls.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import polygon_areas
+from repro.kernels import ops
+
+
+class BlockAggregator:
+    """Batch per-block reductions for a fixed map of ``n_blocks`` blocks.
+
+    Construct directly from ``n_blocks`` (+ optional [n_blocks] areas),
+    or via ``from_engine`` to pick up the engine's block count, census
+    geometry, and a fused assign→aggregate path.
+    """
+
+    def __init__(self, n_blocks: int, areas: Optional[np.ndarray] = None,
+                 *, backend: Optional[str] = None, engine=None):
+        self.n_blocks = int(n_blocks)
+        self.areas = None if areas is None \
+            else np.asarray(areas, np.float64)
+        if self.areas is not None:
+            assert self.areas.shape == (self.n_blocks,), self.areas.shape
+        self.backend = backend
+        self.engine = engine
+        self._fused_ids_jit = None
+
+    @classmethod
+    def from_engine(cls, engine, *, backend: Optional[str] = None
+                    ) -> "BlockAggregator":
+        block_parent, _ = engine.host_parents()
+        areas = polygon_areas(engine.census.blocks) \
+            if engine.census is not None else None
+        return cls(len(block_parent), areas, backend=backend,
+                   engine=engine)
+
+    # -- batch reductions --------------------------------------------------
+
+    def counts(self, bids) -> np.ndarray:
+        """[n_blocks] int64 occupancy from host block ids (the unfused
+        path: ids already on host).  Ids outside [0, n_blocks) — e.g.
+        the engine's -1 "not on the map" — are skipped."""
+        bids = np.asarray(bids).astype(np.int64).ravel()
+        bids = bids[(bids >= 0) & (bids < self.n_blocks)]
+        return np.bincount(bids, minlength=self.n_blocks)
+
+    def reduce(self, ids, values=None) -> ops.SegmentReduce:
+        """Device segment reduction (count/sum/min/max) over assigned
+        ids — see ``ops.segment_reduce`` for the backend and
+        bit-identity contract."""
+        return ops.segment_reduce(ids, values, n_segments=self.n_blocks,
+                                  backend=self.backend)
+
+    def fused_ids(self, points) -> jnp.ndarray:
+        """The fused program's first stage: one jitted computation of
+        engine assign + the aggregation prologue (invalid block ids
+        parked at ``n_blocks``), so the output buffer feeds
+        ``reduce_counts`` with no host-side filtering.  Requires an
+        engine (``from_engine``)."""
+        if self.engine is None:
+            raise ValueError("fused_ids needs an engine "
+                             "(BlockAggregator.from_engine)")
+        if self._fused_ids_jit is None:
+            engine, n = self.engine, self.n_blocks
+
+            @jax.jit
+            def _fused(pts):
+                bid = engine.assign(pts).block.astype(jnp.int32)
+                return jnp.where((bid < 0) | (bid >= n), n, bid)
+
+            self._fused_ids_jit = _fused
+        return self._fused_ids_jit(points)
+
+    def reduce_counts(self, parked_ids) -> np.ndarray:
+        """[n_blocks] counts from a *parked* device id buffer
+        (``fused_ids`` output: every id in [0, n_blocks], n_blocks =
+        parked/invalid).  With an explicit kernel backend the segment
+        kernels reduce on device; on the default CPU path the buffer is
+        consumed through a zero-copy dlpack view — the id vector is
+        never re-materialized, masked, or compacted on host."""
+        if self.backend is not None:
+            out = ops.segment_counts(parked_ids,
+                                     n_segments=self.n_blocks,
+                                     backend=self.backend)
+            return np.asarray(out).astype(np.int64)
+        if isinstance(parked_ids, jax.Array):
+            ids = np.from_dlpack(parked_ids)    # zero-copy on CPU
+        else:
+            ids = np.asarray(parked_ids)
+        return np.bincount(ids, minlength=self.n_blocks + 1)[
+            :self.n_blocks]
+
+    def fused_counts(self, points) -> np.ndarray:
+        """assign→count without materializing the id vector on host:
+        [N, 2] points -> [n_blocks] counts.  Bit-identical to
+        ``counts(np.asarray(engine.assign(points).block))`` — integer
+        accumulation is order-free — while skipping that path's
+        per-batch host copy + filter (the ``analytics_perf``
+        fused-vs-unfused row measures exactly this delta)."""
+        return self.reduce_counts(self.fused_ids(points))
+
+    # -- derived statistics ------------------------------------------------
+
+    def density(self, counts) -> np.ndarray:
+        """[n_blocks] float64 crowding density = counts / block area
+        (zero-area blocks report 0).  Requires areas (``from_engine``
+        with a census, or explicit ``areas=``)."""
+        if self.areas is None:
+            raise ValueError("density needs block areas")
+        counts = np.asarray(counts, np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(self.areas > 0, counts / self.areas, 0.0)
+
+    def weighted_index(self, columns, weights) -> np.ndarray:
+        """HVI-style composite: z-score each [n_blocks] column across
+        blocks (constant columns z-score to 0), blend with ``weights``
+        [n_cols].  float64 throughout; returns [n_blocks]."""
+        cols = np.asarray(columns, np.float64)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        assert cols.shape[0] == self.n_blocks, cols.shape
+        w = np.asarray(weights, np.float64).ravel()
+        assert w.shape == (cols.shape[1],), (w.shape, cols.shape)
+        mean = cols.mean(axis=0)
+        std = cols.std(axis=0)
+        std = np.where(std > 0, std, 1.0)
+        return ((cols - mean) / std) @ w

@@ -99,6 +99,18 @@ def pack_rings(rings: list[np.ndarray], parent: Optional[np.ndarray] = None,
                        fips=fips.astype(np.int64))
 
 
+def polygon_areas(soup: PolygonSoup) -> Array:
+    """[n_poly] float64 polygon areas (shoelace over the padded closed
+    rings — padding repeats the first vertex, so padded edges contribute
+    exactly zero and no masking is needed).  Units are the map's
+    coordinate units squared; the analytics layer divides per-block
+    occupancy counts by these for crowding density (DESIGN.md §16)."""
+    v = soup.verts.astype(np.float64)
+    x1, y1 = v[:, :-1, 0], v[:, :-1, 1]
+    x2, y2 = v[:, 1:, 0], v[:, 1:, 1]
+    return 0.5 * np.abs(np.sum(x1 * y2 - x2 * y1, axis=1))
+
+
 def point_in_polygon_host(px: Array, py: Array, ring: Array) -> Array:
     """fp64 crossing-number oracle for one polygon (host side, numpy).
 

@@ -12,6 +12,7 @@ Backend selection (``REPRO_KERNELS`` env var or explicit ``backend=``):
 from __future__ import annotations
 
 import os
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ from repro.kernels import cascade as cascade_kernels
 from repro.kernels import gather_pip as gather_pip_kernels
 from repro.kernels import pip as pip_kernels
 from repro.kernels import ref
+from repro.kernels import segment as segment_kernels
 from repro.kernels.gather_pip import (DEF_BE, EdgePool,  # noqa: F401
                                       build_edge_pool)
 # (re-exported: ops is the one import surface strategy code uses)
@@ -206,6 +208,104 @@ def bbox_count_select(points: jnp.ndarray, boxes: jnp.ndarray,
     cnt, sel = bbox_kernels.bbox_count_select(pts, boxes_t,
                                               interpret=(b == "interpret"))
     return cnt[:n], sel[:n]
+
+
+class SegmentReduce(NamedTuple):
+    """Per-segment aggregates of ``segment_reduce`` (all [S]-shaped).
+    ``min``/``max`` are only meaningful where ``count > 0`` (empty
+    segments carry the +inf/-inf reduction identities)."""
+
+    count: jnp.ndarray                 # i32
+    sum: jnp.ndarray                   # f32
+    min: jnp.ndarray                   # f32
+    max: jnp.ndarray                   # f32
+
+
+def segment_reduce(ids: jnp.ndarray, values: Optional[jnp.ndarray] = None,
+                   *, n_segments: int, backend: str | None = None,
+                   bp: int | None = None,
+                   bs: int | None = None) -> SegmentReduce:
+    """Per-block aggregation of assigned ids (DESIGN.md §16): count /
+    sum / min / max of ``values`` grouped by ``ids`` over ``n_segments``
+    blocks.  Rows with ids outside [0, n_segments) — the cascade's -1
+    "off map" answer included — are ignored in every backend.
+
+    ``values=None`` aggregates a zero column (callers wanting only
+    occupancy counts).  The kernel path stable-sorts rows by id first
+    (the sort-by-block-id layout kernels/segment.py expects); the ref
+    path is the pure-jnp segment-op oracle.  Semantic ground truth is
+    ``ref.np_segment_reduce`` (numpy bincount, f64 accumulate).
+    """
+    b = resolve_backend(backend)
+    ids = ids.astype(jnp.int32)
+    if values is None:
+        values = jnp.zeros(ids.shape, jnp.float32)
+    values = values.astype(jnp.float32)
+    assert values.shape == ids.shape, (values.shape, ids.shape)
+    # Park every invalid row at the scratch segment so all backends see
+    # one normalized id range [0, n_segments].
+    invalid = (ids < 0) | (ids >= n_segments)
+    ids = jnp.where(invalid, n_segments, ids)
+    if b == "ref":
+        out = ref.segment_reduce(ids, values, n_segments)
+    else:
+        bp = bp or segment_kernels.DEF_BP
+        bs = bs or segment_kernels.DEF_BS
+        order = jnp.argsort(ids)           # jax sorts are stable
+        ids_s = _pad_axis(ids[order], 0, bp, n_segments)
+        vals_s = _pad_axis(values[order], 0, bp, 0.0)
+        # Segments padded past the park id so parked/padded rows land in
+        # a scratch block that the final slice drops.
+        s_pad = ((n_segments + 1 + bs - 1) // bs) * bs
+        out = segment_kernels.segment_reduce_sorted(
+            ids_s.reshape(-1, bp), vals_s.reshape(-1, bp), s_pad,
+            bp=bp, bs=bs, interpret=(b == "interpret"))
+        out = tuple(o[:n_segments] for o in out)
+    count, total, vmin, vmax = out
+    # Normalize empty-segment sentinels once, after any backend, so the
+    # three backends are identical by construction even if a backend's
+    # reduction identity differs in sign-of-zero or NaN handling.
+    empty = count == 0
+    return SegmentReduce(
+        count.astype(jnp.int32),
+        jnp.where(empty, jnp.float32(0.0), total),
+        jnp.where(empty, jnp.float32(jnp.inf), vmin),
+        jnp.where(empty, jnp.float32(-jnp.inf), vmax))
+
+
+def segment_counts(ids: jnp.ndarray, *, n_segments: int,
+                   backend: str | None = None) -> jnp.ndarray:
+    """[S] i32 occupancy counts of assigned ids (invalid ids ignored)."""
+    return segment_reduce(ids, None, n_segments=n_segments,
+                          backend=backend).count
+
+
+def assign_aggregate(points: jnp.ndarray, quant: jnp.ndarray,
+                     cell_lo: jnp.ndarray, cell_hi: jnp.ndarray,
+                     cell_val: jnp.ndarray, top_start: jnp.ndarray,
+                     cand: jnp.ndarray, bbox: jnp.ndarray, pool: EdgePool,
+                     *, n_segments: int, max_level: int, gbits: int,
+                     search_iters: int,
+                     values: Optional[jnp.ndarray] = None,
+                     backend: str | None = None):
+    """Fused assign→aggregate: the one-pass cascade immediately followed
+    by the segment reduction, composed device-side so the [N] id vector
+    is never materialized back on host — only the [S] per-block
+    aggregates (and the cascade's [N] stats words, if the caller keeps
+    them) cross the boundary.  Under ``jax.jit`` the two stages compile
+    into one XLA computation per backend.
+
+    Returns ``(SegmentReduce, (bid, flags, nrest, nskip))`` — the raw
+    cascade outputs ride along for ``onepass_stats`` accounting; callers
+    that only fetch the aggregates never pay the [N] transfer.
+    """
+    bid, flags, nrest, nskip = assign_cascade(
+        points, quant, cell_lo, cell_hi, cell_val, top_start, cand, bbox,
+        pool, max_level=max_level, gbits=gbits, search_iters=search_iters,
+        backend=backend)
+    red = segment_reduce(bid, values, n_segments=n_segments,
+                         backend=backend)
+    return red, (bid, flags, nrest, nskip)
 
 
 def edges_from_soup_np(verts: np.ndarray) -> np.ndarray:

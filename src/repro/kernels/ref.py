@@ -18,7 +18,9 @@ throughput and to keep degenerate (padding) edges well-defined.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.cascade import OUTSIDE, morton
 
@@ -189,6 +191,53 @@ def assign_cascade(points: jnp.ndarray, quant: jnp.ndarray,
     flags = (boundary.astype(jnp.int32)
              | (slot0_hit.astype(jnp.int32) << 1))
     return (bid.astype(jnp.int32), flags, nrest, nskip)
+
+
+def segment_reduce(ids: jnp.ndarray, values: jnp.ndarray,
+                   n_segments: int):
+    """Oracle for the segment-reduce kernel (kernels/segment.py).
+
+    ``ids`` must be pre-masked by ``ops.segment_reduce``: invalid rows
+    parked at segment ``n_segments`` (the extra scratch segment sliced
+    off here).  Returns (count [S] i32, sum [S] f32, min [S] f32,
+    max [S] f32); empty segments are (0, 0.0, +inf, -inf) — the same
+    identities the kernel initializes its accumulators with.
+    """
+    ids = ids.astype(jnp.int32)
+    values = values.astype(jnp.float32)
+    num = n_segments + 1                  # + the park segment
+    ones = jnp.ones(ids.shape, jnp.int32)
+    count = jax.ops.segment_sum(ones, ids, num_segments=num)
+    total = jax.ops.segment_sum(values, ids, num_segments=num)
+    vmin = jax.ops.segment_min(values, ids, num_segments=num)
+    vmax = jax.ops.segment_max(values, ids, num_segments=num)
+    return (count[:n_segments], total[:n_segments],
+            vmin[:n_segments], vmax[:n_segments])
+
+
+def np_segment_reduce(ids, values, n_segments: int):
+    """Host numpy ``bincount`` ground truth for segment reduction — THE
+    semantics every backend must reproduce (tests compare all backends
+    against this).  Rows with ids outside [0, n_segments) are ignored;
+    sums accumulate in float64 and round once to f32 at the end, so any
+    f32 reduction order that is exact (integer-valued data, counts) is
+    bit-identical to it.
+    """
+    ids = np.asarray(ids)
+    if values is None:
+        values = np.zeros(ids.shape, np.float32)
+    values = np.asarray(values)
+    valid = (ids >= 0) & (ids < n_segments)
+    ids = ids[valid].astype(np.int64)
+    vals = values[valid].astype(np.float64)
+    count = np.bincount(ids, minlength=n_segments).astype(np.int32)
+    total = np.bincount(ids, weights=vals,
+                        minlength=n_segments).astype(np.float32)
+    vmin = np.full(n_segments, np.inf, np.float64)
+    np.minimum.at(vmin, ids, vals)
+    vmax = np.full(n_segments, -np.inf, np.float64)
+    np.maximum.at(vmax, ids, vals)
+    return count, total, vmin.astype(np.float32), vmax.astype(np.float32)
 
 
 def bbox_mask(points: jnp.ndarray, boxes: jnp.ndarray) -> jnp.ndarray:

@@ -14,7 +14,11 @@ via ``repro.obs``: ``GeoServer(..., tracer=Tracer())`` records
 per-request span timelines, ``GeoServer.metrics_text()`` exposes the
 registry, and ``ServeConfig(trace_device=True)`` +
 ``start_profile``/``stop_profile`` capture named device traces.
+Windowed streaming analytics (DESIGN.md §16) mounts behind the same
+facade: ``ServeConfig(analytics=AnalyticsConfig(...))`` +
+``GeoServer.snapshot_analytics()``.
 """
+from repro.analytics import AnalyticsConfig
 from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
                                    MicroBatcher, QueueFull, bucket_for,
                                    pad_points)
@@ -25,6 +29,7 @@ from repro.serving.metrics import LatencyWindow, ServerMetrics
 from repro.serving.server import GeoServer, ServeConfig, ServeResult
 
 __all__ = [
+    "AnalyticsConfig",
     "DEFAULT_BUCKETS", "MicroBatch", "MicroBatcher", "QueueFull",
     "bucket_for", "pad_points", "CellTable", "HotCellCache",
     "np_extent_mask", "np_quantize_codes", "LatencyWindow",

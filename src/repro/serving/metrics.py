@@ -86,9 +86,16 @@ def _fmt_num(value) -> str:
 
 class LatencyWindow:
     """Sliding window of the most recent N latency samples; percentiles
-    are exact over the window (a serving-loop-friendly stand-in for a
-    streaming sketch).  Observe/snapshot are lock-guarded: percentiles
-    are taken over a stable copy, never a deque mid-append.
+    are exact over the window.  This is deliberately NOT a streaming
+    sketch — the repo's one streaming-quantile implementation is
+    ``repro.obs.hist.LatencyHistogram`` (log-bucketed, mergeable), which
+    ``ServerMetrics.observe_latency`` feeds in parallel with this
+    window; the streaming *distinct-count* story is
+    ``repro.analytics.sketch.DistinctSketch``.  Keep this class a plain
+    exact window: it answers "recent-p99" with zero bucketing error,
+    and the histogram answers everything long-horizon.  Observe/snapshot
+    are lock-guarded: percentiles are taken over a stable copy, never a
+    deque mid-append.
 
     ``snapshot_ms`` reports **both** counts: ``count_total`` (lifetime
     observations) and ``count_window`` (samples the percentiles are

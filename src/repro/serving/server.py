@@ -55,6 +55,7 @@ and ``strategy="auto"`` replans for the current device.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 from typing import Optional, Sequence, Union
@@ -63,9 +64,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analytics import AnalyticsConfig, WindowedAggregator
 from repro.core.cells import build_cell_covering
 from repro.core.engine import EngineConfig, GeoEngine
-from repro.core.geometry import CensusMap
+from repro.core.geometry import CensusMap, polygon_areas
 from repro.core.resolve import GeoStats
 from repro.serving.batcher import (DEFAULT_BUCKETS, MicroBatch,
                                    MicroBatcher, QueueFull, bucket_for,
@@ -102,6 +104,13 @@ class ServeConfig:
     #                                    (start_profile/stop_profile)
     #                                    names each region/bucket range
     #                                    (DESIGN.md §15).
+    analytics: Optional[AnalyticsConfig] = None  # opt-in windowed
+    #                                    streaming analytics: every served
+    #                                    batch also feeds a per-region
+    #                                    WindowedAggregator (occupancy /
+    #                                    encounters / k-anon suppression —
+    #                                    DESIGN.md §16); read via
+    #                                    ``snapshot_analytics()``.
 
 
 @dataclasses.dataclass
@@ -135,9 +144,16 @@ class _Ticket:
 
     __slots__ = ("state", "county", "block", "region", "_remaining",
                  "_t0", "_lock", "latency_s", "trace", "enqueue_ts",
-                 "attempt")
+                 "attempt", "seq")
+
+    # Process-wide request sequence: the analytics layer's *source
+    # identity* — two points from the same submit share a seq, so
+    # per-block distinct-source counts read "distinct requests", the
+    # encounter/co-location unit (DESIGN.md §16).
+    _seq = itertools.count()
 
     def __init__(self, n: int, t0: float, trace=None):
+        self.seq = next(_Ticket._seq)
         self.state = np.full(n, -1, np.int32)
         self.county = np.full(n, -1, np.int32)
         self.block = np.full(n, -1, np.int32)
@@ -203,6 +219,7 @@ class _Region:
     block_parent: np.ndarray
     county_parent: np.ndarray
     cache: Optional[HotCellCache]
+    analytics: Optional[WindowedAggregator] = None  # ServeConfig.analytics
     stats: Optional[GeoStats] = None      # merged across micro-batches
     # Guards the stats merge — replica workers can finish two of this
     # region's batches at once (GeoStats.merge is a sum, so merge order
@@ -235,6 +252,10 @@ class _BatchWork:
     cid: np.ndarray
     bid: np.ndarray
     device: list                    # [(region_ix, sel rows, miss rows)]
+    ats: float = 0.0                # analytics event time, stamped in
+    #                                 the (ordered) host stage
+    src: Optional[np.ndarray] = None  # [n] i64 source id (request seq)
+    #                                 per point, None = analytics off
 
 
 class GeoServer:
@@ -261,6 +282,7 @@ class GeoServer:
             else [covering] * len(engines)
         if len(coverings) != len(engines):
             raise ValueError("covering list must match engines")
+        self._analytics_on = self.cfg.analytics is not None
         self.regions = [self._make_region(e, c)
                         for e, c in zip(engines, coverings)]
         self.metrics = ServerMetrics(self.cfg.latency_window)
@@ -292,8 +314,14 @@ class GeoServer:
             cache = HotCellCache(CellTable.from_covering(cov),
                                  self.cfg.cache_capacity)
         quant, max_level = engine.extent_quant()
+        analytics = None
+        if self._analytics_on:
+            areas = polygon_areas(engine.census.blocks) \
+                if engine.census is not None else None
+            analytics = WindowedAggregator(len(block_parent),
+                                           self.cfg.analytics, areas)
         return _Region(engine, quant, max_level, block_parent,
-                       county_parent, cache)
+                       county_parent, cache, analytics=analytics)
 
     @classmethod
     def build(cls, census: CensusMap, strategy: str = "fast",
@@ -524,7 +552,19 @@ class GeoServer:
             host = trace.span("host_prepare", tp0, tp1, **attrs)
             for name, s0, s1, sattrs in sub:
                 trace.span(name, s0, s1, parent=host, **sattrs, **attrs)
-        return _BatchWork(mb, owner, sid, cid, bid, device)
+        ats, src = 0.0, None
+        if self._analytics_on:
+            # Analytics event time + source ids are stamped HERE, in the
+            # host stage — sync flush and the async dispatcher both run
+            # this stage serialized in arrival order, so a batch's window
+            # membership is decided before replica threads race on
+            # completion; the window folds themselves commute
+            # (DESIGN.md §16).
+            ats = self.cfg.analytics.clock()
+            src = np.empty(n, np.int64)
+            for ticket, _, batch_off, length in mb.parts:
+                src[batch_off:batch_off + length] = ticket.seq
+        return _BatchWork(mb, owner, sid, cid, bid, device, ats, src)
 
     def _host_stage(self, region: _Region, pts: np.ndarray, r_ix: int):
         """Cache lookup + learn for one region's slice of a batch;
@@ -613,6 +653,24 @@ class GeoServer:
             work.bid[sel[mi]] = rb
         self.metrics.inc("batches")
         self.metrics.inc("points_served", len(pts))
+        if work.src is not None:
+            # Feed the windowed analytics before tickets fill: a synced
+            # submit (or an async drain) then implies this batch's rows
+            # are already folded into the aggregator — the served-vs-
+            # direct equality tests hinge on that ordering.  Cache hits
+            # and device answers feed alike; -1 rows count as off_map.
+            ta0 = time.perf_counter()
+            n_obs = 0
+            for r_ix, region in enumerate(self.regions):
+                if region.analytics is None:
+                    continue
+                sel = work.owner == r_ix
+                if sel.any():
+                    n_obs += region.analytics.observe(
+                        work.ats, work.bid[sel], work.src[sel])
+            self.metrics.inc("analytics_points", n_obs)
+            self.metrics.observe_stage("analytics_observe",
+                                       time.perf_counter() - ta0)
         if dev:
             seen = set()
             for ticket, _, _, _ in work.mb.parts:
@@ -691,19 +749,46 @@ class GeoServer:
         agg["hit_rate"] = agg["hits"] / probes if probes else 0.0
         return agg
 
+    def snapshot_analytics(self) -> Optional[dict]:
+        """Per-region windowed-analytics snapshots (None = analytics
+        off).  Also refreshes the ``analytics_*`` gauges, so a metrics
+        scrape right after sees the same state.  Schema per region:
+        ``WindowedAggregator.snapshot()`` (DESIGN.md §16)."""
+        if not self._analytics_on:
+            return None
+        snaps = [r.analytics.snapshot() if r.analytics is not None
+                 else None for r in self.regions]
+        live = [s for s in snaps if s is not None]
+        for gauge, key in (("analytics_open_panes", "open_panes"),
+                           ("analytics_windows_finalized",
+                            "finalized_total"),
+                           ("analytics_late_dropped", "late_dropped"),
+                           ("analytics_off_map_points", "off_map")):
+            self.metrics.set_gauge(gauge, sum(s[key] for s in live))
+        suppressed = 0
+        for s in live:
+            win = s["open"] or (s["finalized"][-1] if s["finalized"]
+                                else None)
+            if win is not None:
+                suppressed += win["suppressed_blocks"]
+        self.metrics.set_gauge("analytics_suppressed_blocks", suppressed)
+        return {"regions": snaps}
+
     def snapshot(self) -> dict:
         """The live-metrics JSON snapshot (refreshes cache counters)."""
         self.metrics.observe_cache(self.cache_snapshot())
         self._update_queue_gauges()
+        self.snapshot_analytics()
         return self.metrics.snapshot()
 
     def metrics_text(self) -> str:
         """Prometheus-style text exposition of the live registry
-        (refreshes cache/queue gauges first) — ready to serve from a
-        ``/metrics`` endpoint (DESIGN.md §15)."""
+        (refreshes cache/queue/analytics gauges first) — ready to serve
+        from a ``/metrics`` endpoint (DESIGN.md §15)."""
         if any(r.cache is not None for r in self.regions):
             self.metrics.observe_cache(self.cache_snapshot())
         self._update_queue_gauges()
+        self.snapshot_analytics()
         return self.metrics.expose_text()
 
     def start_profile(self, logdir: str) -> bool:

@@ -1,0 +1,331 @@
+"""GeoAnalytics battery (DESIGN.md §16).
+
+Covers the three layers bottom-up:
+
+* segment-reduce kernels — bit-identity vs the numpy bincount oracle
+  across backends (order-free stats always; f32 sums bit-exact on
+  integer-valued inputs, allclose in general), invalid-id parking,
+  fused assign→aggregate vs unfused host bincount;
+* windowed streaming — rotation/eviction under out-of-order
+  timestamps, late-drop accounting, sketch error bounds, k-anonymity
+  suppression, merged-window associativity;
+* serving — served-vs-direct aggregation equality with the cache on
+  and off, sync and async (8 submitters), and the analytics
+  observability surface.
+"""
+import concurrent.futures as cf
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.analytics import (AnalyticsConfig, BlockAggregator,
+                             DistinctSketch, WindowedAggregator,
+                             WindowState)
+from repro.core.engine import GeoEngine
+from repro.core.geometry import polygon_areas
+from repro.kernels import ops
+from repro.kernels.ref import np_segment_reduce
+from repro.serving import (AnalyticsConfig as ServingAnalyticsConfig,
+                           AsyncGeoServer, FrontendConfig, GeoServer,
+                           ServeConfig)
+
+# ---------------------------------------------------------------------------
+# Layer 1: segment-reduce kernels
+# ---------------------------------------------------------------------------
+
+
+def _mixed_ids(rng, n, n_segments):
+    """Ids spanning valid range plus out-of-range rows on both sides."""
+    ids = rng.integers(-2, n_segments + 2, size=n)
+    return ids.astype(np.int32)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_segment_reduce_bitexact_vs_oracle(backend):
+    """Integer-valued f32 workload (the occupancy shape): every output
+    — count, sum, min, max — bit-identical to the numpy oracle."""
+    rng = np.random.default_rng(0)
+    n, s = 3000, 257
+    ids = _mixed_ids(rng, n, s)
+    vals = rng.integers(-50, 50, size=n).astype(np.float32)
+    out = ops.segment_reduce(jnp.asarray(ids), jnp.asarray(vals),
+                             n_segments=s, backend=backend,
+                             bp=128, bs=128)
+    ref = np_segment_reduce(ids, vals, s)
+    np.testing.assert_array_equal(np.asarray(out.count), ref[0])
+    np.testing.assert_array_equal(np.asarray(out.sum), ref[1])
+    np.testing.assert_array_equal(np.asarray(out.min), ref[2])
+    np.testing.assert_array_equal(np.asarray(out.max), ref[3])
+
+
+def test_segment_reduce_backends_bitexact_orderfree():
+    """count/min/max are order-free: bit-identical ref vs interpret even
+    on general floats; general f32 sums agree to rounding."""
+    rng = np.random.default_rng(1)
+    n, s = 2500, 130
+    ids = _mixed_ids(rng, n, s)
+    vals = rng.normal(size=n).astype(np.float32)
+    a = ops.segment_reduce(jnp.asarray(ids), jnp.asarray(vals),
+                           n_segments=s, backend="ref")
+    b = ops.segment_reduce(jnp.asarray(ids), jnp.asarray(vals),
+                           n_segments=s, backend="interpret",
+                           bp=128, bs=128)
+    np.testing.assert_array_equal(np.asarray(a.count), np.asarray(b.count))
+    np.testing.assert_array_equal(np.asarray(a.min), np.asarray(b.min))
+    np.testing.assert_array_equal(np.asarray(a.max), np.asarray(b.max))
+    np.testing.assert_allclose(np.asarray(a.sum), np.asarray(b.sum),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_segment_reduce_empty_and_invalid(backend):
+    """All-invalid ids -> zero counts and the empty-segment sentinels
+    (sum 0, min +inf, max -inf) on every backend."""
+    ids = jnp.array([-1, -5, 99, 100], jnp.int32)
+    out = ops.segment_reduce(ids, None, n_segments=8, backend=backend,
+                             bp=128, bs=128)
+    assert np.asarray(out.count).sum() == 0
+    assert (np.asarray(out.sum) == 0.0).all()
+    assert np.isposinf(np.asarray(out.min)).all()
+    assert np.isneginf(np.asarray(out.max)).all()
+
+
+def test_fused_assign_aggregate_matches_unfused(synth_small,
+                                                points_small):
+    """The tentpole identity: fused assign→segment-count equals
+    assign → host transfer → np.bincount, bit for bit, for every
+    point (counts are integer accumulations — order-free)."""
+    engine = GeoEngine.build(synth_small.census, "fast")
+    pts = points_small[0][:2048]
+    agg = BlockAggregator.from_engine(engine)
+    fused = np.asarray(agg.fused_counts(jnp.asarray(pts)))
+    bid = np.asarray(engine.assign(jnp.asarray(pts)).block)
+    unfused = agg.counts(bid)
+    np.testing.assert_array_equal(fused, unfused)
+    assert fused.sum() == (bid >= 0).sum()
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: aggregation + windows + sketches
+# ---------------------------------------------------------------------------
+
+
+def test_block_aggregator_density_and_index(synth_small):
+    areas = polygon_areas(synth_small.census.blocks)
+    n = len(areas)
+    agg = BlockAggregator(n, areas)
+    counts = np.arange(n)
+    dens = agg.density(counts)
+    assert dens.shape == (n,)
+    nz = areas > 0
+    np.testing.assert_allclose(dens[nz], counts[nz] / areas[nz])
+    # HVI-style composite: z-scored columns blend linearly; a constant
+    # column contributes exactly zero.
+    rng = np.random.default_rng(2)
+    cols = np.stack([rng.normal(size=n), np.full(n, 7.0)], axis=1)
+    idx = agg.weighted_index(cols, [0.6, 0.4])
+    z = (cols[:, 0] - cols[:, 0].mean()) / cols[:, 0].std()
+    np.testing.assert_allclose(idx, 0.6 * z, atol=1e-12)
+
+
+def test_window_rotation_out_of_order():
+    """Tumbling windows with lateness: out-of-order events inside the
+    horizon land in their event-time window; beyond it they drop."""
+    cfg = AnalyticsConfig(window_s=10.0, allowed_lateness_s=5.0,
+                          sketch_bits=256)
+    agg = WindowedAggregator(4, cfg)
+    agg.observe(1.0, [0], [1])
+    agg.observe(12.0, [1], [2])
+    agg.observe(3.0, [0], [3])       # out of order, within lateness
+    assert agg.finalized_total == 0  # wm = 12 - 5 < 10: window 0 open
+    agg.observe(16.0, [2], [4])      # wm = 11: window [0,10) closes
+    assert agg.finalized_total == 1
+    assert agg.finalized[0].counts.tolist() == [2, 0, 0, 0]
+    assert 0 not in agg.panes        # pane evicted with its window
+    n = agg.observe(4.0, [3], [5])   # beyond horizon now
+    assert n == 0 and agg.late_dropped == 1
+    assert agg.observed == 5
+
+
+def test_window_sliding_composes_panes():
+    """Sliding window = merge of tumbling panes: every finalized
+    2-pane window equals the sum of its panes' exact counts."""
+    cfg = AnalyticsConfig(window_s=10.0, slide_s=5.0,
+                          allowed_lateness_s=0.0, sketch_bits=256)
+    agg = WindowedAggregator(3, cfg)
+    per_pane = {0: [0, 0], 1: [1], 2: [2, 2, 2], 3: [0]}
+    for pane, bids in per_pane.items():
+        agg.observe(pane * 5.0 + 1.0, bids, list(range(len(bids))))
+    agg.advance(40.0)
+    by_start = {s.start: s for s in agg.finalized}
+    for w in (0, 1, 2):
+        merged = np.bincount(per_pane[w] + per_pane[w + 1], minlength=3)
+        np.testing.assert_array_equal(by_start[w * 5.0].counts, merged)
+    assert len(agg.panes) == 0       # everything evicted
+
+
+def test_window_state_merge_associative():
+    """WindowState.merge is exactly associative (counter sums + bitmap
+    ORs) — the property sliding windows and replica feeds rely on."""
+    rng = np.random.default_rng(3)
+    states = []
+    for _ in range(3):
+        st = WindowState(16, 256)
+        st.observe(rng.integers(0, 16, 40),
+                   rng.integers(0, 1000, 40))
+        states.append(st)
+    a, b, c = states
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    np.testing.assert_array_equal(left.counts, right.counts)
+    np.testing.assert_array_equal(left.sketch.bitmap,
+                                  right.sketch.bitmap)
+    assert left.n_events == right.n_events
+    # and non-mutating: the inputs kept their own event counts
+    assert sum(s.n_events for s in states) == left.n_events
+
+
+def test_sketch_error_bound_seeded():
+    """Linear counting at ~12% load: relative error well under 10% on a
+    seeded stream (deterministic — splitmix64 has no salt)."""
+    rng = np.random.default_rng(4)
+    sk = DistinctSketch(4, 4096)
+    for seg, n_distinct in ((0, 500), (1, 50), (2, 1)):
+        src = rng.integers(0, n_distinct, size=4 * n_distinct) \
+            + seg * 10_000
+        sk.observe(np.full(src.shape, seg), src)
+        true = len(np.unique(src))
+        est = sk.estimate()[seg]
+        assert abs(est - true) <= max(0.1 * true, 1.0), (seg, est, true)
+    assert sk.estimate()[3] == 0.0   # untouched segment
+
+
+def test_k_anonymity_suppression():
+    """Blocks below k distinct sources are suppressed from every
+    published view but kept in the raw arrays."""
+    cfg = AnalyticsConfig(window_s=10.0, allowed_lateness_s=0.0,
+                          k_anon=3, sketch_bits=512)
+    agg = WindowedAggregator(3, cfg)
+    # block 0: 5 distinct sources; block 1: 1 source, many events
+    agg.observe(1.0, [0] * 5 + [1] * 20,
+                [10, 11, 12, 13, 14] + [99] * 20)
+    agg.observe(12.0, [2], [1])      # rotate window 0 out
+    snap = agg.finalized[0]
+    assert snap.suppressed.tolist() == [False, True, False]
+    assert snap.counts[1] == 20      # raw state intact
+    top = snap.top_k(10)
+    assert [row["block"] for row in top] == [0]
+    assert snap.as_dict()["suppressed_blocks"] == 1
+    # pairs: C(5,2) potential encounters in block 0
+    assert snap.pairs[0] == 10
+
+
+def test_window_snapshot_schema():
+    agg = WindowedAggregator(4, AnalyticsConfig(window_s=5.0,
+                                                sketch_bits=256))
+    agg.observe(1.0, [0, 1], [1, 2])
+    snap = agg.snapshot()
+    for key in ("config", "observed", "off_map", "late_dropped",
+                "open_panes", "finalized_total", "finalized", "open"):
+        assert key in snap, key
+    assert snap["open"]["n_events"] == 2
+    assert snap["observed"] == 2 and snap["open_panes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: serving integration
+# ---------------------------------------------------------------------------
+
+
+def _analytics_cfg():
+    tick = [1000.0]
+    return ServingAnalyticsConfig(window_s=60.0, sketch_bits=512,
+                                  clock=lambda: tick[0])
+
+
+@pytest.fixture(scope="module")
+def serving_engine(synth_small):
+    return GeoEngine.build(synth_small.census, "fast")
+
+
+@pytest.mark.parametrize("cache", [True, False])
+def test_served_equals_direct_sync(serving_engine, points_small, cache):
+    """Every served batch feeds the window; after synchronous submits
+    the open window's counts equal a direct engine assign + bincount,
+    exactly — cache hits and device answers alike."""
+    pts = points_small[0][:1500]
+    server = GeoServer(serving_engine,
+                       ServeConfig(cache=cache, analytics=_analytics_cfg()))
+    direct = np.asarray(serving_engine.assign(jnp.asarray(pts)).block)
+    for i in range(0, len(pts), 250):
+        server.submit(pts[i:i + 250])
+    ana = server.regions[0].analytics
+    expect = np.bincount(direct[direct >= 0], minlength=ana.n_blocks)
+    cur = ana.current()
+    np.testing.assert_array_equal(cur.counts, expect)
+    assert cur.n_events == int((direct >= 0).sum())
+    assert cur.density is not None   # engine census -> areas wired
+
+
+@pytest.mark.timeout(120)
+def test_served_equals_direct_async(serving_engine, points_small):
+    """8 concurrent submitters, 2 replicas: after drain, the analytics
+    state equals the direct aggregation — arrival order decided window
+    membership and the folds commute, so the race is harmless."""
+    pts = points_small[0][:1600]
+    direct = np.asarray(serving_engine.assign(jnp.asarray(pts)).block)
+    with AsyncGeoServer(serving_engine,
+                        ServeConfig(cache=True,
+                                    analytics=_analytics_cfg()),
+                        frontend=FrontendConfig(n_submitters=8,
+                                                n_replicas=2)) as server:
+        with cf.ThreadPoolExecutor(8) as pool:
+            futs = [pool.submit(server.submit, pts[i:i + 100])
+                    for i in range(0, len(pts), 100)]
+            for f in futs:
+                f.result(timeout=60)
+        server.drain(timeout=60)
+        ana = server.regions[0].analytics
+        expect = np.bincount(direct[direct >= 0],
+                             minlength=ana.n_blocks)
+        cur = ana.current()
+        np.testing.assert_array_equal(cur.counts, expect)
+        # 16 requests -> distinct-source estimates bounded by 16
+        assert int(cur.distinct.max()) <= 16
+
+
+def test_serving_analytics_observability(serving_engine, points_small):
+    """snapshot_analytics() returns the per-region schema and the
+    analytics gauges/stage land in the exposition text."""
+    pts = points_small[0][:300]
+    server = GeoServer(serving_engine,
+                       ServeConfig(analytics=_analytics_cfg()))
+    server.submit(pts)
+    snap = server.snapshot_analytics()
+    assert snap is not None and len(snap["regions"]) == 1
+    assert snap["regions"][0]["observed"] == 300
+    text = server.metrics_text()
+    for needle in ("analytics_points", "analytics_open_panes",
+                   "analytics_windows_finalized",
+                   "analytics_late_dropped",
+                   "analytics_suppressed_blocks",
+                   "analytics_observe"):
+        assert needle in text, needle
+    # analytics off -> no surface
+    plain = GeoServer(serving_engine, ServeConfig())
+    assert plain.snapshot_analytics() is None
+
+
+def test_serving_analytics_unowned_points_not_folded(serving_engine):
+    """Points outside every region's extent belong to no region's
+    aggregator — they are not folded (the router's region == -1 already
+    accounts for them) and no window opens."""
+    far = np.full((8, 2), 500.0, np.float32)
+    server = GeoServer(serving_engine,
+                       ServeConfig(analytics=_analytics_cfg()))
+    res = server.submit(far)
+    assert (res.region == -1).all()
+    snap = server.snapshot_analytics()["regions"][0]
+    assert snap["observed"] == 0 and snap["off_map"] == 0
+    assert snap["open"] is None      # nothing landed in a window
