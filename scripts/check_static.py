@@ -1,0 +1,96 @@
+"""Run the GeoLint static-analysis suite and ratchet per-rule finding
+counts against scripts/static_baseline.json (tier-1 semantics —
+mirrors check_tier1.py).
+
+    python scripts/check_static.py                 # ratchet against baseline
+    python scripts/check_static.py --strict        # any finding fails
+    python scripts/check_static.py --update-baseline
+
+Exit status: 0 only when every rule matches the ratchet exactly.  1 on:
+  * a regression — a rule with more findings than recorded (the new
+    findings are printed);
+  * a STALE baseline — a rule with fewer findings than recorded.  A PR
+    that fixes findings must tighten the baseline in the same PR, or
+    the gate silently tolerates that much rot forever.
+
+Scope: all six rules over src/repro; the portable rules (wallclock,
+compat-boundary) additionally over benchmarks/, examples/, scripts/,
+and tests/.  Per-line suppression: ``# geolint: ignore[rule] -- reason``
+(DESIGN.md §17).
+"""
+import argparse
+import datetime
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "scripts", "static_baseline.json")
+SRC_ROOTS = [os.path.join(REPO, "src", "repro")]
+WIDE_ROOTS = [os.path.join(REPO, d)
+              for d in ("benchmarks", "examples", "scripts", "tests")]
+
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis import ALL_RULES, counts_by_rule, run_all  # noqa: E402
+
+
+def _relpath(findings):
+    for f in findings:
+        yield type(f)(f.rule, os.path.relpath(f.path, REPO), f.line,
+                      f.message)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on any finding, baseline ignored")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="record current per-rule counts as the baseline")
+    args = ap.parse_args()
+
+    findings = list(_relpath(run_all(SRC_ROOTS, WIDE_ROOTS)))
+    counts = counts_by_rule(findings)
+
+    if args.update_baseline:
+        with open(BASELINE, "w") as f:
+            json.dump({"recorded": datetime.date.today().isoformat(),
+                       "rules": counts}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"static baseline recorded: {counts}")
+        return 0
+
+    if args.strict:
+        for f in findings:
+            print(f.render())
+        print(f"geolint --strict: {len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    with open(BASELINE) as f:
+        base = json.load(f)
+    base_rules = base.get("rules", {})
+    status = 0
+    for rule in sorted(set(ALL_RULES) | set(base_rules) | set(counts)):
+        have = counts.get(rule, 0)
+        want = base_rules.get(rule, 0)
+        delta = have - want
+        print(f"geolint {rule}: {have} finding(s) ({delta:+d} vs "
+              f"baseline {base.get('recorded', '?')})")
+        if delta > 0:
+            print(f"geolint REGRESSION: rule '{rule}' gained {delta} "
+                  f"finding(s):")
+            for f in findings:
+                if f.rule == rule:
+                    print(f"  {f.render()}")
+            status = 1
+        elif delta < 0:
+            print(f"geolint STALE BASELINE: rule '{rule}' has {-delta} "
+                  f"fewer finding(s) than recorded — run "
+                  f"check_static.py --update-baseline in this PR so the "
+                  f"gate cannot drift back")
+            status = 1
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

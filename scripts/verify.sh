@@ -8,6 +8,11 @@
 #      seed baseline (scripts/tier1_baseline.json) and fails the verify
 #      on any regression — pytest's raw exit status is informational
 #      (the baseline's known model-stack failures are expected);
+#   2b. scripts/check_static.py — the GeoLint static-analysis ratchet
+#      (lock discipline, wallclock, compat boundary, trace purity,
+#      dead code; DESIGN.md §17) vs scripts/static_baseline.json —
+#      then a REPRO_LOCKCHECK=1 rerun of the frontend + analytics
+#      concurrency batteries under the runtime lock-order detector;
 #   3. benchmarks/geo_perf --smoke, benchmarks/serve_perf --smoke, and
 #      benchmarks/load_perf --smoke (sustained-QPS-at-SLO through the
 #      concurrent AsyncGeoServer front-end — the serve_slo row) — run
@@ -44,6 +49,21 @@ trap 'rm -f "$pytest_log"' EXIT
 python -m pytest -q "$@" 2>&1 | tee "$pytest_log"
 python scripts/check_tier1.py "$pytest_log"
 status=$?
+
+# GeoLint static-analysis ratchet (DESIGN.md §17): per-rule finding
+# counts gated against scripts/static_baseline.json — regressions AND
+# stale baselines both fail.
+python scripts/check_static.py
+static=$?
+[ "$status" -eq 0 ] && status=$static
+
+# Runtime lock-order / guarded-write detector over the concurrency
+# batteries: instruments the §14 locks and fails on any acquisition
+# cycle or annotated-field write without its lock held.
+REPRO_LOCKCHECK=1 python -m pytest -q tests/test_frontend.py \
+    tests/test_analytics.py
+lockcheck=$?
+[ "$status" -eq 0 ] && status=$lockcheck
 
 python -m benchmarks.geo_perf --smoke
 bench=$?

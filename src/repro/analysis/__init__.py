@@ -1,0 +1,79 @@
+"""GeoLint: repo-specific static analysis + runtime lock checking
+(DESIGN.md §17).
+
+Six rules over four checker modules, all operating on parsed
+``SourceModule`` objects (AST + recovered comments):
+
+  ================  ====================================================
+  rule id           what it enforces
+  ================  ====================================================
+  lock-discipline   every write to a ``# guarded-by:`` field is inside
+                    ``with`` of the owning lock (DESIGN.md §14 table)
+  wallclock         ``time.time()`` only under ``# wallclock-ok:``
+  compat-boundary   version-gated jax surface only in compat.py (§12)
+  trace-purity      no host side effects reachable from jit/pallas
+  unused-import     imports bind names that are actually used
+  unreachable       no statements after return/raise/break/continue
+  ================  ====================================================
+
+``run_all(roots)`` is the single entry point ``scripts/check_static.py``
+ratchets; ``lockcheck`` (imported explicitly, not via ``run_all``) is
+the opt-in runtime detector behind ``REPRO_LOCKCHECK=1``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.analysis.boundary import check_boundary
+from repro.analysis.common import (ALL_RULES, RULE_BOUNDARY, RULE_LOCKS,
+                                   RULE_PURITY, RULE_UNREACHABLE,
+                                   RULE_UNUSED_IMPORT, RULE_WALLCLOCK,
+                                   Finding, SourceModule, load_modules)
+from repro.analysis.deadcode import check_unreachable, check_unused_imports
+from repro.analysis.locks import (FieldGuard, check_locks, check_wallclock,
+                                  collect_guards)
+from repro.analysis.purity import check_purity
+
+__all__ = [
+    "ALL_RULES", "RULE_BOUNDARY", "RULE_LOCKS", "RULE_PURITY",
+    "RULE_UNREACHABLE", "RULE_UNUSED_IMPORT", "RULE_WALLCLOCK",
+    "Finding", "SourceModule", "FieldGuard", "load_modules",
+    "collect_guards", "check_locks", "check_wallclock", "check_boundary",
+    "check_purity", "check_unused_imports", "check_unreachable",
+    "run_all", "counts_by_rule",
+]
+
+# Rules whose scope is the library tree only: lock discipline and the
+# call-graph walk key off annotations/roots that live in src/repro;
+# import hygiene on tests/benches would fight pytest fixtures.
+_SRC_ONLY_RULES = (RULE_LOCKS, RULE_PURITY, RULE_UNUSED_IMPORT,
+                   RULE_UNREACHABLE)
+
+
+def run_all(src_roots: Sequence[str],
+            wide_roots: Sequence[str] = ()) -> list[Finding]:
+    """Run every static rule.  ``src_roots`` (the library tree) gets all
+    six rules; ``wide_roots`` (benchmarks / examples / scripts / tests)
+    additionally gets the portable rules — wallclock and
+    compat-boundary — whose contracts hold repo-wide."""
+    src_mods = load_modules(src_roots)
+    wide_mods = load_modules(wide_roots) if wide_roots else []
+    every = src_mods + wide_mods
+
+    findings: list[Finding] = []
+    findings += check_locks(src_mods)
+    findings += check_purity(src_mods)
+    findings += check_unused_imports(src_mods)
+    findings += check_unreachable(src_mods)
+    findings += check_wallclock(every)
+    findings += check_boundary(every)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def counts_by_rule(findings: Iterable[Finding]) -> dict[str, int]:
+    """Per-rule totals in a stable key order — the ratchet's unit."""
+    out = {rule: 0 for rule in ALL_RULES}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out

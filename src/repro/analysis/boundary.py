@@ -1,0 +1,111 @@
+"""Compat-boundary checker (DESIGN.md §17, rule id ``compat-boundary``).
+
+DESIGN.md §12's rule: the repo runs on jax 0.4.x *and* 0.5+, and the
+only module allowed to touch version-gated jax surface is
+``src/repro/compat.py``.  Everything else imports the compat wrappers
+(``use_mesh``, ``get_abstract_mesh``, ``shard_map``,
+``with_sharding_constraint``).  A direct use anywhere else is a latent
+AttributeError on one jax generation — exactly the class of bug that
+took 27 model-stack tests down before PR 5.
+
+Flagged outside ``compat.py``:
+
+  * any ``jax._src`` import or attribute chain (private API — no
+    stability contract at all);
+  * the version-gated public symbols: ``jax.set_mesh``,
+    ``jax.shard_map``, ``jax.sharding.get_abstract_mesh``,
+    ``jax.sharding.AxisType``, ``jax.experimental.shard_map.shard_map``
+    — as imports *and* as attribute references;
+  * the legacy ``check_rep=`` keyword (0.4.x spelling of
+    ``check_vma`` — callers must go through ``compat.shard_map``,
+    which translates).
+
+``hasattr(jax, "set_mesh")``-style *probes* are fine anywhere (the
+string literal is not an attribute access); in practice they too live
+only in compat.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.common import (RULE_BOUNDARY, Finding, SourceModule,
+                                   dotted_name)
+
+__all__ = ["check_boundary", "ALLOWED_FILES"]
+
+# Module basenames allowed to touch gated symbols (repo-relative match
+# on the path tail).  compat.py is the sanctioned surface.
+ALLOWED_FILES = ("repro/compat.py",)
+
+_PRIVATE_PREFIX = "jax._src"
+
+# (module, name) pairs whose import is version-gated.
+_GATED_IMPORTS = {
+    ("jax", "set_mesh"),
+    ("jax", "shard_map"),
+    ("jax.sharding", "get_abstract_mesh"),
+    ("jax.sharding", "AxisType"),
+    ("jax.experimental.shard_map", "shard_map"),
+}
+
+# Fully-dotted attribute chains whose *reference* is version-gated.
+_GATED_ATTRS = {
+    "jax.set_mesh",
+    "jax.shard_map",
+    "jax.sharding.get_abstract_mesh",
+    "jax.sharding.AxisType",
+}
+
+_GATED_KWARGS = {"check_rep"}
+
+
+def _allowed(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(norm.endswith(tail) for tail in ALLOWED_FILES)
+
+
+def check_boundary(mods: Iterable[SourceModule]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in mods:
+        if _allowed(mod.path):
+            continue
+        for node in ast.walk(mod.tree):
+            hits: list[str] = []
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith(_PRIVATE_PREFIX):
+                        hits.append(f"import {a.name}")
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                if node.module.startswith(_PRIVATE_PREFIX):
+                    hits.append(f"from {node.module} import ...")
+                else:
+                    for a in node.names:
+                        if (node.module, a.name) in _GATED_IMPORTS:
+                            hits.append(
+                                f"from {node.module} import {a.name}")
+            elif isinstance(node, ast.Attribute):
+                name = dotted_name(node)
+                if name is None:
+                    pass
+                elif name.startswith(_PRIVATE_PREFIX):
+                    hits.append(name)
+                elif name in _GATED_ATTRS:
+                    # Only flag the full chain once (the walk also visits
+                    # the inner Attribute nodes, whose dotted names are
+                    # prefixes and never in the gated set).
+                    hits.append(name)
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg in _GATED_KWARGS:
+                        hits.append(f"{kw.arg}= (0.4.x-only kwarg; use "
+                                    f"compat.shard_map(check_vma=...))")
+            for what in hits:
+                if mod.suppressed(RULE_BOUNDARY, node.lineno):
+                    continue
+                findings.append(Finding(
+                    RULE_BOUNDARY, mod.path, node.lineno,
+                    f"version-gated jax surface outside compat.py: "
+                    f"{what} (DESIGN.md §12 — route through "
+                    f"repro.compat)"))
+    return findings

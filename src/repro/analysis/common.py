@@ -1,0 +1,236 @@
+"""Shared infrastructure for the GeoLint static-analysis suite
+(DESIGN.md §17).
+
+Every checker in this package works on a ``SourceModule``: one parsed
+file bundling the AST, the raw source lines, and — crucially, since the
+``ast`` module discards them — the **per-line comments** recovered with
+``tokenize``.  Comments carry the whole annotation grammar:
+
+  * ``# guarded-by: <lock>``     — on a field-initialising assignment:
+    every later write to that field must run under ``with self.<lock>``
+    (locks.py; the runtime detector enforces the same table live);
+  * ``# requires-lock: <lock>``  — on a ``def``: the method is only
+    called with ``<lock>`` already held, so its body counts as inside
+    the lock for the lexical checker (and the runtime detector verifies
+    the claim on every instrumented run);
+  * ``# wallclock-ok: <reason>`` — on a ``time.time()`` call site:
+    wall-clock time is intended here (event-time stamping), not a
+    latency/deadline measurement bug;
+  * ``# geolint: ignore[<rule>] -- <reason>`` — suppress one rule on
+    one line.  The reason is mandatory: a bare ignore does not
+    suppress (undocumented exemptions are exactly the rot this suite
+    exists to stop).
+
+Checkers yield ``Finding`` rows; ``scripts/check_static.py`` ratchets
+their per-rule counts against ``scripts/static_baseline.json``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import Iterable, Iterator, Optional
+
+# Rule ids, one per checker pass (the baseline keys).
+RULE_LOCKS = "lock-discipline"
+RULE_WALLCLOCK = "wallclock"
+RULE_BOUNDARY = "compat-boundary"
+RULE_PURITY = "trace-purity"
+RULE_UNUSED_IMPORT = "unused-import"
+RULE_UNREACHABLE = "unreachable"
+
+ALL_RULES = (RULE_LOCKS, RULE_WALLCLOCK, RULE_BOUNDARY, RULE_PURITY,
+             RULE_UNUSED_IMPORT, RULE_UNREACHABLE)
+
+_IGNORE_RE = re.compile(
+    r"geolint:\s*ignore\[(?P<rules>[a-z0-9_,\- ]+)\]\s*--\s*\S")
+_GUARDED_RE = re.compile(r"guarded-by:\s*(?P<lock>[A-Za-z_][A-Za-z0-9_]*)")
+_REQUIRES_RE = re.compile(r"requires-lock:\s*(?P<lock>[A-Za-z_][A-Za-z0-9_]*)")
+_WALLCLOCK_OK_RE = re.compile(r"wallclock-ok:\s*\S")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str                   # repo-relative where possible
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceModule:
+    """One parsed source file: AST + lines + per-line comments."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # line number -> comment text ("#" stripped, whitespace trimmed).
+        # tokenize is the only faithful way to recover end-of-line
+        # comments; ast drops them.
+        self.comments: dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = \
+                        tok.string.lstrip("#").strip()
+        except tokenize.TokenError:      # pragma: no cover - parse said ok
+            pass
+        # Attach parent pointers once: several checkers need lexical
+        # ancestry (with-block containment, enclosing function/class).
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._geolint_parent = node  # type: ignore[attr-defined]
+
+    @classmethod
+    def load(cls, path: str) -> "SourceModule":
+        with open(path, encoding="utf-8") as f:
+            return cls(path, f.read())
+
+    # -- annotation grammar ------------------------------------------------
+
+    def comment_at(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        """True when ``line`` (or the line above, for statements whose
+        annotation would not fit inline) carries
+        ``# geolint: ignore[rule] -- reason``."""
+        for ln in (line, line - 1):
+            m = _IGNORE_RE.search(self.comment_at(ln))
+            if m and rule in {r.strip()
+                              for r in m.group("rules").split(",")}:
+                return True
+        return False
+
+    def guarded_by(self, line: int) -> Optional[str]:
+        m = _GUARDED_RE.search(self.comment_at(line))
+        return m.group("lock") if m else None
+
+    def requires_lock(self, line: int) -> Optional[str]:
+        for ln in (line, line - 1):
+            m = _REQUIRES_RE.search(self.comment_at(ln))
+            if m:
+                return m.group("lock")
+        return None
+
+    def wallclock_ok(self, line: int) -> bool:
+        for ln in (line, line - 1):
+            if _WALLCLOCK_OK_RE.search(self.comment_at(ln)):
+                return True
+        return False
+
+    # -- lexical helpers ---------------------------------------------------
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return getattr(node, "_geolint_parent", None)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def enclosing_function(self, node: ast.AST):
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def enclosing_class(self, node: ast.AST):
+        """Nearest ClassDef ancestor — method bodies and closures nested
+        inside them both count (a closure's ``self`` is the method's)."""
+        for anc in self.ancestors(node):
+            if isinstance(anc, ast.ClassDef):
+                return anc
+        return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None (calls, subscripts
+    and anything dynamic break the chain — those are not static
+    references to a module symbol)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def import_aliases(tree: ast.Module) -> dict[str, str]:
+    """Local name -> imported dotted origin, for every top-level (and
+    function-local) import in the module.  ``import numpy as np`` maps
+    ``np -> numpy``; ``from time import monotonic`` maps
+    ``monotonic -> time.monotonic``."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def resolve_call_name(mod: SourceModule, call: ast.Call,
+                      aliases: Optional[dict] = None) -> Optional[str]:
+    """The *origin* dotted name of a call target: local aliases are
+    rewritten to their imported origin, so ``from time import time;
+    time()`` and ``import time; time.time()`` both resolve to
+    ``time.time``."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    if aliases is None:
+        aliases = import_aliases(mod.tree)
+    head, _, rest = name.partition(".")
+    origin = aliases.get(head)
+    if origin is None:
+        return name
+    return f"{origin}.{rest}" if rest else origin
+
+
+def iter_py_files(roots: Iterable[str]) -> Iterator[str]:
+    """Every .py file under ``roots`` (files accepted verbatim), sorted
+    for deterministic finding order."""
+    out = []
+    for root in roots:
+        if os.path.isfile(root):
+            out.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return iter(sorted(set(out)))
+
+
+def load_modules(roots: Iterable[str]) -> list[SourceModule]:
+    mods = []
+    for path in iter_py_files(roots):
+        try:
+            mods.append(SourceModule.load(path))
+        except SyntaxError as e:
+            # A file the analyzers cannot parse is itself a finding-level
+            # event, but the tier-1 suite already fails on it; re-raise
+            # so check_static never silently skips a broken file.
+            raise SyntaxError(f"{path}: {e}") from e
+    return mods

@@ -1,0 +1,104 @@
+"""Import-hygiene + unreachable-code rules (DESIGN.md §17, rule ids
+``unused-import`` and ``unreachable``).
+
+``unused-import`` is a deliberately conservative pyflakes-lite: a name
+bound by ``import`` / ``from ... import`` is unused when it appears in
+no other ``Name`` node in the module and not in the module's
+``__all__`` list (package ``__init__`` re-exports are public surface,
+not dead weight).  ``from __future__ import ...`` and ``import x  #
+noqa``-style side-effect imports suppressed with ``# geolint:
+ignore[unused-import] -- reason`` are exempt.
+
+``unreachable`` flags statements that follow a terminal statement
+(``return`` / ``raise`` / ``break`` / ``continue``) in the same block —
+the classic leftovers of a refactor.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.common import (RULE_UNREACHABLE, RULE_UNUSED_IMPORT,
+                                   Finding, SourceModule)
+
+__all__ = ["check_unused_imports", "check_unreachable"]
+
+
+def _exported_names(tree: ast.Module) -> set[str]:
+    """String entries of a module-level ``__all__`` list/tuple."""
+    out: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            if isinstance(node.value, (ast.List, ast.Tuple)):
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant) and \
+                            isinstance(elt.value, str):
+                        out.add(elt.value)
+    return out
+
+
+def check_unused_imports(mods: Iterable[SourceModule]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in mods:
+        bound: list[tuple[str, int, str]] = []   # (local name, line, what)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    local = a.asname or a.name.split(".")[0]
+                    bound.append((local, node.lineno, f"import {a.name}"))
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    local = a.asname or a.name
+                    bound.append((local, node.lineno,
+                                  f"from {node.module or '.'} "
+                                  f"import {a.name}"))
+        if not bound:
+            continue
+        import_lines = {ln for _, ln, _ in bound}
+        used: set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Name) and \
+                    node.lineno not in import_lines:
+                used.add(node.id)
+        used |= _exported_names(mod.tree)
+        for local, line, what in bound:
+            if local in used or local.startswith("_"):
+                continue
+            if mod.suppressed(RULE_UNUSED_IMPORT, line):
+                continue
+            findings.append(Finding(
+                RULE_UNUSED_IMPORT, mod.path, line,
+                f"'{what}' binds '{local}', never used in this module "
+                f"(and not re-exported via __all__)"))
+    return findings
+
+
+_TERMINAL = (ast.Return, ast.Raise, ast.Break, ast.Continue)
+
+
+def check_unreachable(mods: Iterable[SourceModule]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            for field in ("body", "orelse", "finalbody"):
+                block = getattr(node, field, None)
+                if not isinstance(block, list):
+                    continue
+                for i, stmt in enumerate(block[:-1]):
+                    if isinstance(stmt, _TERMINAL):
+                        nxt = block[i + 1]
+                        if mod.suppressed(RULE_UNREACHABLE, nxt.lineno):
+                            break
+                        findings.append(Finding(
+                            RULE_UNREACHABLE, mod.path, nxt.lineno,
+                            f"statement unreachable after "
+                            f"'{type(stmt).__name__.lower()}' on line "
+                            f"{stmt.lineno}"))
+                        break
+    return findings

@@ -1,0 +1,295 @@
+"""Runtime lock-order race detector (DESIGN.md §17, opt-in via
+``REPRO_LOCKCHECK=1``).
+
+The static checker (locks.py) proves *lexical* discipline; this module
+checks the two properties lexical analysis cannot: the **acquisition
+order graph** (a cycle across threads is a potential deadlock even if
+every individual site looks fine) and the **caller-holds contracts**
+(``# requires-lock:`` claims, and writes reached through aliases or
+container methods the AST rule cannot see).
+
+``install()`` patches the serving/analytics classes of the DESIGN.md
+§14 lock table:
+
+  * every lock attribute is wrapped in an instrumented proxy the moment
+    it is assigned (``__setattr__`` interception), so all later
+    ``with``/``acquire``/``wait`` traffic is recorded — per-thread held
+    stacks plus a global edge set ``held -> acquired`` keyed by
+    ``Class.attr``;
+  * writes to ``# guarded-by:`` fields (the table is *derived from the
+    annotations* via ``locks.collect_guards`` — one source of truth)
+    are checked against the held stack: a rebind without the owning
+    lock held is recorded as a violation.  ``__init__`` frames are
+    exempt (construction publishes; the refcount handles subclass
+    chains like ``_FutureTicket -> _Ticket``).
+
+The conftest hook asserts, after every test, that no violations
+accumulated and the edge graph is still acyclic.  Deliberately NOT a
+general happens-before race detector: it enforces this repo's single-
+guard table, nothing more.
+"""
+from __future__ import annotations
+
+import importlib
+import threading
+from typing import Optional
+
+from repro.analysis.common import SourceModule
+from repro.analysis.locks import collect_guards
+
+__all__ = ["install", "uninstall", "registry", "wrap_lock",
+           "LockCheckRegistry"]
+
+
+class LockCheckRegistry:
+    """Per-thread held stacks + global acquisition-order edges +
+    recorded violations.  All mutation is GIL-atomic dict/list/set ops
+    on primitive keys — no lock of its own (it must never perturb the
+    ordering it observes)."""
+
+    def __init__(self) -> None:
+        self._tls = threading.local()
+        # lock name -> set of lock names acquired while it was held.
+        self.edges: dict[str, set[str]] = {}
+        self.violations: list[str] = []
+
+    # -- held stack --------------------------------------------------------
+
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def note_acquire(self, lock: "_InstrumentedLock") -> None:
+        st = self._stack()
+        for held in st:
+            if held is lock or held.name == lock.name:
+                continue           # RLock / same-named reentrance
+            self.edges.setdefault(held.name, set()).add(lock.name)
+        st.append(lock)
+
+    def note_release(self, lock: "_InstrumentedLock") -> None:
+        st = self._stack()
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] is lock:
+                del st[i]
+                return
+
+    def holds(self, lock: "_InstrumentedLock") -> bool:
+        return any(h is lock for h in self._stack())
+
+    # -- reporting ---------------------------------------------------------
+
+    def violation(self, msg: str) -> None:
+        self.violations.append(msg)
+
+    def find_cycle(self) -> Optional[list[str]]:
+        """A cycle in the acquisition-order graph, as the lock-name
+        path, or None.  Any cycle means two code paths take the same
+        locks in opposite orders — a deadlock waiting for the right
+        interleaving."""
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in self.edges}
+        path: list[str] = []
+
+        def dfs(n: str) -> Optional[list[str]]:
+            color[n] = GREY
+            path.append(n)
+            for m in sorted(self.edges.get(n, ())):
+                c = color.get(m, WHITE)
+                if c == GREY:
+                    return path[path.index(m):] + [m]
+                if c == WHITE:
+                    hit = dfs(m)
+                    if hit:
+                        return hit
+            path.pop()
+            color[n] = BLACK
+            return None
+
+        for n in sorted(self.edges):
+            if color[n] == WHITE:
+                hit = dfs(n)
+                if hit:
+                    return hit
+        return None
+
+    def reset(self) -> None:
+        self.edges.clear()
+        self.violations.clear()
+
+
+registry = LockCheckRegistry()
+
+
+class _InstrumentedLock:
+    """Proxy over Lock/RLock recording acquire/release order."""
+
+    _DELEGATE = ("locked",)
+
+    def __init__(self, inner, name: str):
+        self._inner = inner
+        self.name = name
+
+    def acquire(self, *a, **k):
+        got = self._inner.acquire(*a, **k)
+        if got:
+            registry.note_acquire(self)
+        return got
+
+    def release(self):
+        registry.note_release(self)
+        self._inner.release()
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __repr__(self):                                # pragma: no cover
+        return f"<lockcheck {self.name} over {self._inner!r}>"
+
+
+class _InstrumentedCondition(_InstrumentedLock):
+    """Condition proxy: ``wait`` releases and reacquires the underlying
+    lock, and the held stack must mirror that or every waiter would
+    look like it holds the lock across the sleep."""
+
+    def wait(self, timeout=None):
+        registry.note_release(self)
+        try:
+            return self._inner.wait(timeout)
+        finally:
+            registry.note_acquire(self)
+
+    def wait_for(self, predicate, timeout=None):
+        registry.note_release(self)
+        try:
+            return self._inner.wait_for(predicate, timeout)
+        finally:
+            registry.note_acquire(self)
+
+    def notify(self, n: int = 1):
+        self._inner.notify(n)
+
+    def notify_all(self):
+        self._inner.notify_all()
+
+
+def wrap_lock(inner, name: str):
+    """Public wrapper used by tests and by the ``__setattr__`` hook."""
+    if isinstance(inner, _InstrumentedLock):
+        return inner
+    if isinstance(inner, threading.Condition):
+        return _InstrumentedCondition(inner, name)
+    return _InstrumentedLock(inner, name)
+
+
+# -- class instrumentation --------------------------------------------------
+
+# (module, class, lock attributes).  Guarded fields come from the
+# # guarded-by: annotations in the sources — collect_guards below.
+_TARGETS = (
+    ("repro.serving.batcher", "MicroBatcher", ("_cond",)),
+    ("repro.serving.cache", "HotCellCache", ("_lock",)),
+    ("repro.serving.metrics", "ServerMetrics", ("_lock",)),
+    ("repro.serving.metrics", "LatencyWindow", ("_lock",)),
+    ("repro.serving.server", "_Ticket", ("_lock",)),
+    ("repro.serving.server", "_Region", ("lock",)),
+    ("repro.serving.frontend", "_FutureTicket", ()),
+    ("repro.serving.frontend", "AsyncGeoServer", ("_dispatch_lock",)),
+    ("repro.analytics.window", "WindowedAggregator", ("_lock",)),
+    ("repro.obs.trace", "SpanBuffer", ("_lock",)),
+)
+
+# id(instance) -> __init__ nesting depth (construction exemption for
+# guarded-field writes; refcounted so subclass __init__ chains stay
+# exempt end to end).
+_constructing: dict[int, int] = {}
+_installed: list[tuple] = []       # (cls, attr, original or _MISSING)
+_MISSING = object()
+
+
+def _module_guards(module) -> dict[str, dict[str, str]]:
+    """class name -> {field -> owning lock attr} from the module's own
+    ``# guarded-by:`` annotations."""
+    path = getattr(module, "__file__", None)
+    if not path:                                       # pragma: no cover
+        return {}
+    guards: dict[str, dict[str, str]] = {}
+    for g in collect_guards(SourceModule.load(path)):
+        guards.setdefault(g.cls, {})[g.field] = g.lock
+    return guards
+
+
+def _patch(cls, lock_attrs: tuple, guarded: dict) -> None:
+    lock_set = frozenset(lock_attrs)
+    orig_setattr = cls.__setattr__
+    orig_init = cls.__dict__.get("__init__")
+
+    def __setattr__(self, name, value):
+        if name in lock_set:
+            value = wrap_lock(value, f"{cls.__name__}.{name}")
+        elif name in guarded and id(self) not in _constructing:
+            lock = getattr(self, guarded[name], None)
+            if isinstance(lock, _InstrumentedLock) and \
+                    not registry.holds(lock):
+                registry.violation(
+                    f"write to {cls.__name__}.{name} on thread "
+                    f"{threading.current_thread().name} without "
+                    f"{lock.name} held")
+        orig_setattr(self, name, value)
+
+    _record(cls, "__setattr__", cls.__dict__.get("__setattr__", _MISSING))
+    cls.__setattr__ = __setattr__
+
+    if orig_init is not None:
+        def __init__(self, *a, **k):
+            key = id(self)
+            _constructing[key] = _constructing.get(key, 0) + 1
+            try:
+                orig_init(self, *a, **k)
+            finally:
+                left = _constructing[key] - 1
+                if left:
+                    _constructing[key] = left
+                else:
+                    del _constructing[key]
+
+        _record(cls, "__init__", orig_init)
+        cls.__init__ = __init__
+
+
+def _record(cls, attr, original) -> None:
+    _installed.append((cls, attr, original))
+
+
+def install() -> None:
+    """Idempotent: patch every §14 class for instrumentation."""
+    if _installed:
+        return
+    for mod_name, cls_name, lock_attrs in _TARGETS:
+        module = importlib.import_module(mod_name)
+        cls = getattr(module, cls_name)
+        guards = _module_guards(module).get(cls_name, {})
+        _patch(cls, lock_attrs, guards)
+
+
+def uninstall() -> None:
+    """Restore the patched classes (test isolation only — the conftest
+    hook installs once per instrumented session and never unwinds)."""
+    while _installed:
+        cls, attr, original = _installed.pop()
+        if original is _MISSING:
+            delattr(cls, attr)
+        else:
+            setattr(cls, attr, original)
+    _constructing.clear()
+    registry.reset()

@@ -1,0 +1,245 @@
+"""Lock-discipline checker + wall-clock lint (DESIGN.md §17, rule ids
+``lock-discipline`` and ``wallclock``).
+
+The serving/analytics stack's concurrency story rests on a single-guard
+lock table (DESIGN.md §14): every mutable shared field has exactly one
+owning lock, and every write runs under it.  This checker makes that
+table *executable*: fields are annotated at their initialising
+assignment with ``# guarded-by: <lock>`` and the checker flags any
+write to an annotated field that is not lexically inside a
+``with <base>.<lock>:`` block.
+
+Annotation grammar (two scopes, deliberately distinct):
+
+  * **instance-private** — annotation on a ``self.<field> = ...`` line
+    inside a method (normally ``__init__``).  Checked for ``self``
+    writes *within the declaring class only*: the field is an
+    implementation detail and outside code never touches it.
+  * **shared** — annotation on a class-level field (dataclass style,
+    e.g. ``_Region.stats``).  Checked at **every** write site in the
+    analyzed tree, whatever the base expression: ``region.stats = ...``
+    must sit inside ``with region.lock:`` — same base, owning lock.
+
+A helper that is documented as "called with the lock held" (the
+``WindowedAggregator`` state machine) declares it with
+``# requires-lock: <lock>`` on its ``def`` line; its body then counts
+as guarded for the lexical checker, and the runtime detector
+(lockcheck.py) verifies the claim on every instrumented test run.
+
+Writes are assignments, augmented assignments, deletes, and container
+stores through the field (``self.counters[k] = v`` is a write to
+``counters``).  Mutating *method* calls (``.append``/``.popitem``) are
+out of lexical reach — the runtime detector's attribute hook and the
+thread batteries cover those paths.
+
+The wall-clock lint (``wallclock``) flags every ``time.time()`` call:
+latency and deadline arithmetic must use a monotonic clock
+(``time.monotonic()`` / ``time.perf_counter()``) — wall time jumps
+(NTP slew, DST, manual set) and a latency window or flush deadline
+computed from it silently corrupts.  Sites that *mean* wall time
+(event-time stamping) annotate ``# wallclock-ok: <reason>``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Optional
+
+from repro.analysis.common import (RULE_LOCKS, RULE_WALLCLOCK, Finding,
+                                   SourceModule, dotted_name,
+                                   import_aliases, resolve_call_name)
+
+__all__ = ["FieldGuard", "collect_guards", "check_locks",
+           "check_wallclock"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldGuard:
+    """One ``# guarded-by:`` annotation: ``field`` of ``cls`` is owned
+    by lock attribute ``lock``; ``shared`` marks class-level (cross-
+    object-checked) declarations."""
+
+    path: str
+    cls: str
+    field: str
+    lock: str
+    shared: bool
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def collect_guards(mod: SourceModule) -> list[FieldGuard]:
+    """Every ``# guarded-by:`` annotation in the module (see module
+    docstring for the instance-private vs shared split)."""
+    guards: list[FieldGuard] = []
+    for cls in ast.walk(mod.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        for node in cls.body:                      # class-level = shared
+            field = None
+            if isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                field = node.target.id
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                field = node.targets[0].id
+            lock = mod.guarded_by(node.lineno) if field else None
+            if field and lock:
+                guards.append(FieldGuard(mod.path, cls.name, field, lock,
+                                         shared=True))
+        for fn in cls.body:                        # init-site = private
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    targets = node.targets \
+                        if isinstance(node, ast.Assign) else [node.target]
+                    lock = mod.guarded_by(node.lineno)
+                    if not lock:
+                        continue
+                    for t in targets:
+                        field = _self_attr(t)
+                        if field:
+                            guards.append(FieldGuard(
+                                mod.path, cls.name, field, lock,
+                                shared=False))
+    return guards
+
+
+def _write_targets(node: ast.AST) -> list[ast.AST]:
+    if isinstance(node, ast.Assign):
+        return list(node.targets)
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target] if getattr(node, "value", True) else []
+    if isinstance(node, ast.Delete):
+        return list(node.targets)
+    return []
+
+
+def _written_field(target: ast.AST) -> Optional[tuple[ast.AST, str]]:
+    """(base expression, field name) for attribute writes and container
+    stores through an attribute: ``b.f = ...``, ``b.f[k] = ...``,
+    ``b.f[k][j] += ...``, ``del b.f[k]`` all write field ``f`` of
+    ``b``."""
+    while isinstance(target, (ast.Subscript, ast.Starred)):
+        target = target.value
+    if isinstance(target, ast.Attribute):
+        return target.value, target.attr
+    return None
+
+
+def _base_repr(node: ast.AST) -> Optional[str]:
+    return dotted_name(node)
+
+
+def _held_locks(mod: SourceModule, node: ast.AST) -> set[str]:
+    """Dotted lock expressions lexically held at ``node``: one entry
+    per ``with`` item on the ancestor path (``self._cond`` ->
+    "self._cond"), plus ``<base>.<lock>`` synthesized from any
+    enclosing ``# requires-lock:`` def (the caller-holds contract).
+    Ancestry stops adding ``with`` items across nested ``def``
+    boundaries: a closure body runs later, outside the lock."""
+    held: set[str] = set()
+    crossed_def = False
+    for anc in mod.ancestors(node):
+        if isinstance(anc, ast.With) and not crossed_def:
+            for item in anc.items:
+                name = dotted_name(item.context_expr)
+                if name:
+                    held.add(name)
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not crossed_def:
+                lock = mod.requires_lock(anc.lineno)
+                if lock is not None:
+                    held.add(f"self.{lock}")
+            crossed_def = True
+    return held
+
+
+def check_locks(mods: Iterable[SourceModule],
+                extra_guards: Iterable[FieldGuard] = ()) -> list[Finding]:
+    """Run the lock-discipline rule over ``mods``.  Guards are collected
+    from the same modules (plus ``extra_guards``) first, so shared
+    fields are checked at write sites in *other* modules too."""
+    mods = list(mods)
+    guards = list(extra_guards)
+    for mod in mods:
+        guards.extend(collect_guards(mod))
+    # self-writes: (cls, field) -> lock;  shared: field -> {locks}
+    private: dict[tuple[str, str], str] = {}
+    shared: dict[str, set[str]] = {}
+    for g in guards:
+        private[(g.cls, g.field)] = g.lock
+        if g.shared:
+            shared.setdefault(g.field, set()).add(g.lock)
+
+    findings: list[Finding] = []
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            for target in _write_targets(node):
+                hit = _written_field(target)
+                if hit is None:
+                    continue
+                base, field = hit
+                fn = mod.enclosing_function(target)
+                if fn is not None and fn.name in ("__init__", "__new__"):
+                    continue               # construction publishes
+                lock = None
+                base_name = _base_repr(base)
+                if base_name == "self":
+                    cls = mod.enclosing_class(target)
+                    if cls is not None:
+                        lock = private.get((cls.name, field))
+                if lock is None and field in shared and base_name and \
+                        base_name != "self":
+                    locks = shared[field]
+                    held = _held_locks(mod, target)
+                    if any(f"{base_name}.{lk}" in held for lk in locks):
+                        continue
+                    if mod.suppressed(RULE_LOCKS, node.lineno):
+                        continue
+                    findings.append(Finding(
+                        RULE_LOCKS, mod.path, node.lineno,
+                        f"write to shared guarded field "
+                        f"'{base_name}.{field}' outside "
+                        f"'with {base_name}.{'/'.join(sorted(locks))}:'"))
+                    continue
+                if lock is None:
+                    continue
+                held = _held_locks(mod, target)
+                if f"self.{lock}" in held:
+                    continue
+                if mod.suppressed(RULE_LOCKS, node.lineno):
+                    continue
+                findings.append(Finding(
+                    RULE_LOCKS, mod.path, node.lineno,
+                    f"write to 'self.{field}' (guarded-by: {lock}) "
+                    f"outside 'with self.{lock}:'"))
+    return findings
+
+
+def check_wallclock(mods: Iterable[SourceModule]) -> list[Finding]:
+    """Flag ``time.time()`` calls without a ``# wallclock-ok:``
+    annotation (see module docstring)."""
+    findings: list[Finding] = []
+    for mod in mods:
+        aliases = import_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if resolve_call_name(mod, node, aliases) != "time.time":
+                continue
+            if mod.wallclock_ok(node.lineno) or \
+                    mod.suppressed(RULE_WALLCLOCK, node.lineno):
+                continue
+            findings.append(Finding(
+                RULE_WALLCLOCK, mod.path, node.lineno,
+                "time.time() is wall-clock: latency/deadline math needs "
+                "time.monotonic() or time.perf_counter() (annotate "
+                "'# wallclock-ok: <reason>' if wall time is the point)"))
+    return findings

@@ -1,0 +1,247 @@
+"""Trace-purity checker (DESIGN.md §17, rule id ``trace-purity``).
+
+Code reachable from a ``@jax.jit`` / ``pl.pallas_call`` site runs at
+*trace* time: host-side effects execute once, get baked into the
+compiled program as constants, and silently disagree with every later
+invocation.  A ``time.time()`` read, a Python/numpy RNG draw, or a
+mutation of closure state inside a jitted function is therefore a
+correctness bug that no unit test on a single call can see.
+
+The checker builds a project-wide call graph:
+
+  * **roots** — functions decorated with ``jax.jit`` (bare or through
+    ``functools.partial(jax.jit, ...)``), functions wrapped at a
+    ``jax.jit(f)`` call site, and kernel bodies passed to
+    ``pl.pallas_call``;
+  * **edges** — direct calls by name (same module, any nesting level)
+    and cross-module calls through import aliases
+    (``simple_mod.cascade_assign(...)`` resolves into
+    ``repro/core/simple.py``).  Method calls on objects are out of
+    static reach and not followed.
+
+Inside every reachable function it flags:
+
+  * ``time.*`` calls (trace-time clock reads);
+  * Python RNG (``random.*``) and numpy RNG (``np.random.*``) calls;
+  * ``np.*`` calls other than the dtype/static-shape allowlist below —
+    numpy executes on host at trace time, so data-dependent numpy is a
+    tracer leak (jnp is the device spelling);
+  * ``global`` / ``nonlocal`` declarations (closure-state mutation
+    inside a traced function re-runs only at trace time).
+
+The numpy allowlist covers trace-time-constant usage: dtype
+constructors and scalar types (``np.float32(...)``), and static shape
+arithmetic on Python ints (``np.prod(shape)``-style) — those are pure
+functions of static arguments, re-evaluated identically at every
+retrace.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, Optional
+
+from repro.analysis.common import (RULE_PURITY, Finding, SourceModule,
+                                   dotted_name, import_aliases)
+
+__all__ = ["check_purity", "NUMPY_ALLOWED"]
+
+# np.* calls that are pure functions of static (trace-time-constant)
+# arguments — dtype constructors/casts and static shape arithmetic.
+NUMPY_ALLOWED = frozenset({
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "dtype", "finfo",
+    "iinfo", "prod", "ceil", "floor", "log2", "sqrt", "asarray",
+    "array", "arange", "zeros", "ones", "full",
+})
+
+_JIT_NAMES = {"jax.jit", "jax.pmap"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+@dataclasses.dataclass
+class _FuncInfo:
+    key: tuple          # (module path, qualname)
+    node: ast.AST       # FunctionDef / AsyncFunctionDef / Lambda
+    module: "_ModInfo"
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class _ModInfo:
+    mod: SourceModule
+    dotted: Optional[str]                 # e.g. "repro.core.fast"
+    aliases: dict
+    by_name: dict                         # simple name -> [_FuncInfo]
+
+
+def _module_dotted(path: str) -> Optional[str]:
+    norm = path.replace("\\", "/")
+    marker = "/src/"
+    ix = norm.rfind(marker)
+    if ix < 0:
+        if norm.startswith("src/"):
+            tail = norm[len("src/"):]
+        else:
+            return None
+    else:
+        tail = norm[ix + len(marker):]
+    if not tail.endswith(".py"):
+        return None
+    tail = tail[:-3]
+    if tail.endswith("/__init__"):
+        tail = tail[:-len("/__init__")]
+    return tail.replace("/", ".")
+
+
+def _resolve(aliases: dict, name: Optional[str]) -> Optional[str]:
+    """Alias-resolve a dotted reference to its imported origin."""
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = aliases.get(head)
+    if origin is None:
+        return name
+    return f"{origin}.{rest}" if rest else origin
+
+
+def _is_jit_decorator(aliases: dict, dec: ast.AST) -> bool:
+    name = _resolve(aliases, dotted_name(dec))
+    if name in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        fname = _resolve(aliases, dotted_name(dec.func))
+        if fname in _JIT_NAMES:
+            return True
+        if fname in _PARTIAL_NAMES and dec.args:
+            return _resolve(aliases, dotted_name(dec.args[0])) \
+                in _JIT_NAMES
+    return False
+
+
+def _index_module(mod: SourceModule) -> _ModInfo:
+    info = _ModInfo(mod, _module_dotted(mod.path),
+                    import_aliases(mod.tree), {})
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fi = _FuncInfo((mod.path, node.name), node, info)
+            info.by_name.setdefault(node.name, []).append(fi)
+    return info
+
+
+def _mark_roots(info: _ModInfo) -> None:
+    mod, aliases = info.mod, info.aliases
+    for fis in info.by_name.values():
+        for fi in fis:
+            for dec in getattr(fi.node, "decorator_list", ()):
+                if _is_jit_decorator(aliases, dec):
+                    fi.is_root = True
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = _resolve(aliases, dotted_name(node.func))
+        args: list[ast.AST] = []
+        if fname in _JIT_NAMES:
+            args = node.args[:1]
+        elif fname is not None and (fname == "pallas_call" or
+                                    fname.endswith(".pallas_call")):
+            args = node.args[:1]
+        for arg in args:
+            if isinstance(arg, ast.Name):
+                for fi in info.by_name.get(arg.id, ()):
+                    fi.is_root = True
+
+
+def _callees(fi: _FuncInfo, index: dict) -> list[_FuncInfo]:
+    """Static call edges out of one function's own body (nested defs
+    are separate graph nodes, reached through call edges)."""
+    info = fi.module
+    out: list[_FuncInfo] = []
+    for node in _own_body_walk(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None:
+            continue
+        if "." not in name:                       # same-module by name
+            out.extend(info.by_name.get(name, ()))
+            continue
+        origin = _resolve(info.aliases, name)
+        if origin is None or "." not in origin:
+            continue
+        mod_part, _, func_part = origin.rpartition(".")
+        target = index.get(mod_part)
+        if target is not None and "." not in func_part:
+            out.extend(target.by_name.get(func_part, ()))
+    return out
+
+
+def _own_body_walk(fn: ast.AST):
+    """Walk a function's body without descending into nested function
+    definitions (their bodies are separate call-graph nodes); the
+    nested ``def`` node itself is yielded so calls in its decorators
+    and defaults still count."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def check_purity(mods: Iterable[SourceModule]) -> list[Finding]:
+    infos = [_index_module(m) for m in mods]
+    index = {i.dotted: i for i in infos if i.dotted}
+    for info in infos:
+        _mark_roots(info)
+
+    # BFS over the call graph from the jit/pallas roots.
+    reachable: dict[int, _FuncInfo] = {}
+    frontier = [fi for info in infos
+                for fis in info.by_name.values()
+                for fi in fis if fi.is_root]
+    while frontier:
+        fi = frontier.pop()
+        if id(fi.node) in reachable:
+            continue
+        reachable[id(fi.node)] = fi
+        frontier.extend(_callees(fi, index))
+
+    findings: list[Finding] = []
+    for fi in reachable.values():
+        mod, aliases = fi.module.mod, fi.module.aliases
+        for node in _own_body_walk(fi.node):
+            what = None
+            if isinstance(node, ast.Call):
+                origin = _resolve(aliases, dotted_name(node.func))
+                if origin is None:
+                    continue
+                if origin == "time.time" or origin.startswith("time."):
+                    what = f"trace-time clock read: {origin}()"
+                elif origin == "random" or origin.startswith("random."):
+                    what = f"Python RNG under trace: {origin}()"
+                elif origin.startswith("numpy.random"):
+                    what = f"numpy RNG under trace: {origin}()"
+                elif origin.startswith("numpy."):
+                    leaf = origin.split(".", 1)[1]
+                    if leaf not in NUMPY_ALLOWED:
+                        what = (f"host numpy call under trace: "
+                                f"{origin}() (use jnp, or move it out "
+                                f"of the traced function)")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                kind = "global" if isinstance(node, ast.Global) \
+                    else "nonlocal"
+                what = (f"'{kind} {', '.join(node.names)}' — closure/"
+                        f"module state mutation inside a traced "
+                        f"function runs once, at trace time")
+            if what is None:
+                continue
+            if mod.suppressed(RULE_PURITY, node.lineno):
+                continue
+            findings.append(Finding(
+                RULE_PURITY, mod.path, node.lineno,
+                f"{what} [reachable from jit/pallas root "
+                f"'{fi.node.name}']"))
+    return findings

@@ -66,8 +66,11 @@ class AnalyticsConfig:
     max_finalized: int = 64            # finalized-window history bound
     # Serving timestamp source: the host stage stamps each batch once
     # with this clock (arrival order — see server._prepare_batch);
-    # injectable for deterministic tests/replays.
-    clock: Callable[[], float] = time.monotonic
+    # injectable for deterministic tests/replays.  Event time is
+    # *wall* time on purpose: pane boundaries must line up across
+    # processes and survive restarts, which monotonic clocks (origin
+    # = process start) cannot do.
+    clock: Callable[[], float] = time.time  # wallclock-ok: event time
 
     def resolve(self) -> tuple[float, int, float]:
         """(slide_s, n_panes, lateness_s) with validation."""
@@ -180,14 +183,14 @@ class WindowedAggregator:
             else np.asarray(areas, np.float64)
         if self.areas is not None:
             assert self.areas.shape == (self.n_blocks,), self.areas.shape
-        self.panes: dict[int, WindowState] = {}
-        self.finalized: list[WindowSnapshot] = []
-        self.finalized_total = 0
-        self.observed = 0
-        self.off_map = 0
-        self.late_dropped = 0
-        self._max_ts = -math.inf
-        self._last_emitted: Optional[int] = None
+        self.panes: dict[int, WindowState] = {}     # guarded-by: _lock
+        self.finalized: list[WindowSnapshot] = []   # guarded-by: _lock
+        self.finalized_total = 0                    # guarded-by: _lock
+        self.observed = 0                           # guarded-by: _lock
+        self.off_map = 0                            # guarded-by: _lock
+        self.late_dropped = 0                       # guarded-by: _lock
+        self._max_ts = -math.inf                    # guarded-by: _lock
+        self._last_emitted: Optional[int] = None    # guarded-by: _lock
         self._lock = threading.Lock()
 
     # -- feed --------------------------------------------------------------
@@ -245,7 +248,7 @@ class WindowedAggregator:
                 state = pane if state is None else state.merge(pane)
         return state
 
-    def _advance(self) -> None:
+    def _advance(self) -> None:  # requires-lock: _lock
         wm = self._watermark()
         windows = sorted({w for p in self.panes
                           for w in range(p - self.n_panes + 1, p + 1)})

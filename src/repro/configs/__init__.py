@@ -7,6 +7,12 @@ from repro.configs.base import (ALL_SHAPES, DECODE_32K, LONG_500K,
                                 PREFILL_32K, TRAIN_4K, ModelConfig,
                                 RunConfig, ShapeConfig, shapes_for)
 
+# The registry is also the convenience surface for the shape/run presets:
+# callers import everything config-shaped from ``repro.configs``.
+__all__ = ["ALL_SHAPES", "ARCH_NAMES", "DECODE_32K", "LONG_500K",
+           "ModelConfig", "PREFILL_32K", "RunConfig", "ShapeConfig",
+           "TRAIN_4K", "get_config", "get_reduced_config", "shapes_for"]
+
 _MODULES = {
     "yi-9b": yi_9b,
     "qwen1.5-0.5b": qwen1_5_0_5b,

@@ -27,7 +27,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.geometry import CensusMap, PolygonSoup, pack_rings
+from repro.core.geometry import CensusMap, pack_rings
 
 # CONUS-like extent in chart space (degrees).
 EXTENT = (-125.0, -66.0, 24.0, 49.0)

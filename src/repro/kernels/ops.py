@@ -24,6 +24,9 @@ from repro.kernels import gather_pip as gather_pip_kernels
 from repro.kernels import pip as pip_kernels
 from repro.kernels import ref
 from repro.kernels import segment as segment_kernels
+# re-export: ops.* is the one import surface strategy code and tests
+# use for the edge-pool helpers (ops.DEF_BE, ops.build_edge_pool).
+# geolint: ignore[unused-import] -- re-export through ops.*
 from repro.kernels.gather_pip import (DEF_BE, EdgePool,  # noqa: F401
                                       build_edge_pool)
 # (re-exported: ops is the one import surface strategy code uses)

@@ -19,7 +19,6 @@ Usage:
   python -m repro.launch.dryrun --all --out results/dryrun.json
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -32,7 +31,7 @@ from repro.configs.base import RunConfig, ShapeConfig, shapes_for
 from repro.launch.hlo_cost import cost_of
 from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.models.model import build_model, input_specs
-from repro.models.module import abstract_params, param_bytes, param_count
+from repro.models.module import param_bytes, param_count
 from repro.optim import adamw
 from repro.runtime.steps import make_prefill_step, make_serve_step, \
     make_train_step
@@ -49,7 +48,7 @@ def run_cell(arch: str, shape: ShapeConfig, mesh, run: RunConfig,
              verbose: bool = True) -> dict:
     cfg = get_config(arch)
     model = build_model(cfg)
-    t0 = time.time()
+    t0 = time.monotonic()
 
     with use_mesh(mesh):
         p_abs = model.abstract_params()
@@ -86,9 +85,9 @@ def run_cell(arch: str, shape: ShapeConfig, mesh, run: RunConfig,
             step = make_serve_step(model, run, mesh)
             lowered = jax.jit(step).lower(params, tokens, cache)
 
-        t_lower = time.time() - t0
+        t_lower = time.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.monotonic() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

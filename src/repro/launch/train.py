@@ -26,7 +26,7 @@ import jax
 from repro.compat import use_mesh
 from repro.configs import ARCH_NAMES, get_config, get_reduced_config
 from repro.configs.base import RunConfig
-from repro.data.pipeline import SyntheticLM, make_source
+from repro.data.pipeline import make_source
 from repro.launch.mesh import make_mesh
 from repro.models.model import build_model
 from repro.models.module import init_params, param_count

@@ -15,9 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ACT_DTYPE, BATCH, apply_rope, dense, \
+from repro.models.layers import BATCH, apply_rope, dense, \
     dense_spec, rmsnorm, rmsnorm_spec, rope_tables, shard_act
-from repro.models.module import P
 
 NEG_INF = -1.0e30
 

@@ -6,7 +6,6 @@ stacked along the scan dimension so decode steps scan too.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -17,8 +16,7 @@ from repro.models import ssm, xlstm
 from repro.models import transformer as tf
 from repro.models.layers import ACT_DTYPE, BATCH, dense, embed, embed_spec, \
     rmsnorm, rmsnorm_spec, shard_act, unembed, unembed_spec
-from repro.models.module import P, abstract_params, stack
-from repro.models.moe import moe_ffn
+from repro.models.module import abstract_params, stack
 
 CACHE_DTYPE = tf.CACHE_DTYPE
 

@@ -19,7 +19,6 @@ a single rank — it is the reference implementation of itself.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ from repro.compat import shard_map
 from repro.distributed.dispatch import gather_from_buckets, plan_routes, \
     scatter_to_buckets, slot_tables
 from repro.models.ffn import ffn, ffn_spec
-from repro.models.layers import dense, dense_spec
+from repro.models.layers import dense_spec
 from repro.models.module import P
 
 

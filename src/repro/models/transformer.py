@@ -14,22 +14,17 @@ Decode steps mirror the same group structure with stacked caches.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RunConfig
-from repro.models import ssm, xlstm
+from repro.configs.base import RunConfig
 from repro.models.attention import blockwise_attn, decode_attn, \
     gqa_decode_self_attn, gqa_project_qkv, gqa_self_attn, gqa_spec, \
     mla_decode_self_attn, mla_self_attn, mla_spec
 from repro.models.ffn import ffn, ffn_spec
-from repro.models.layers import ACT_DTYPE, BATCH, dense, dense_spec, \
-    embed, embed_spec, rmsnorm, rmsnorm_spec, rope_tables, shard_act, \
-    unembed, unembed_spec
-from repro.models.module import P, stack
+from repro.models.layers import ACT_DTYPE, BATCH, dense, rmsnorm, \
+    rmsnorm_spec, rope_tables, shard_act
+from repro.models.module import P
 from repro.models.moe import moe_ffn, moe_spec
 
 CACHE_DTYPE = jnp.bfloat16

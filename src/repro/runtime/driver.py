@@ -27,7 +27,6 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.optim import adamw
 
 
 @dataclasses.dataclass

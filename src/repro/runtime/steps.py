@@ -8,14 +8,11 @@ Both are what launch/dryrun.py lowers for every (arch x shape x mesh) cell.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro import compat
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import RunConfig
 from repro.models.layers import act_spec
 from repro.models.model import Model
 from repro.optim import adamw

@@ -112,14 +112,14 @@ class MicroBatcher:
         # (ticket, points [n, 2] f32, base_off): base_off is the slice's
         # offset inside its original request — 0 for fresh puts, > 0 for
         # requeued tails of split requests (see ``requeue``).
-        self._q: deque = deque()
-        self.queued_points = 0
+        self._q: deque = deque()       # guarded-by: _cond
+        self.queued_points = 0         # guarded-by: _cond
         # perf_counter of the oldest queued arrival — the deadline-flush
         # clock (GeoServer's ``max_delay_ms``).  Armed when the queue
         # goes non-empty, cleared on drain; a requeue after a failed
         # flush RE-ARMS it (see ``requeue``), so the deadline bounds the
         # wait since the last serve attempt, not since first arrival.
-        self._oldest_ts: Optional[float] = None
+        self._oldest_ts: Optional[float] = None  # guarded-by: _cond
         # One condition guards every mutation: producers wait on it for
         # room (``put(wait=True)``), the flusher waits on it for work
         # (``wait_for_work``); drain/requeue notify both sides.

@@ -96,12 +96,12 @@ class HotCellCache:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.table = table
         self.capacity = int(capacity)
-        self._map: OrderedDict[int, int] = OrderedDict()
+        self._map: OrderedDict[int, int] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.RLock()
-        self.hits = 0
-        self.misses = 0
-        self.insertions = 0
-        self.evictions = 0
+        self.hits = 0                  # guarded-by: _lock
+        self.misses = 0                # guarded-by: _lock
+        self.insertions = 0            # guarded-by: _lock
+        self.evictions = 0             # guarded-by: _lock
 
     def __len__(self) -> int:
         with self._lock:

@@ -103,9 +103,9 @@ class LatencyWindow:
     4096-sample p99 as covering millions of requests."""
 
     def __init__(self, window: int = 4096):
-        self._samples: deque = deque(maxlen=int(window))
+        self._samples: deque = deque(maxlen=int(window))  # guarded-by: _lock
         self._lock = threading.Lock()
-        self.count = 0
+        self.count = 0                 # guarded-by: _lock
 
     def observe(self, seconds: float) -> None:
         with self._lock:
@@ -131,12 +131,12 @@ class ServerMetrics:
     """The registry (see module docstring)."""
 
     def __init__(self, latency_window: int = 4096):
-        self.counters: dict[str, float] = {}
-        self.gauges: dict[str, float] = {}
+        self.counters: dict[str, float] = {}  # guarded-by: _lock
+        self.gauges: dict[str, float] = {}    # guarded-by: _lock
         self.latency = LatencyWindow(latency_window)
         # Per-stage histograms, created lazily so custom stages are
         # first-class; the well-known serve stages are in STAGES.
-        self._stages: dict[str, LatencyHistogram] = {}
+        self._stages: dict[str, LatencyHistogram] = {}  # guarded-by: _lock
         # RLock: observe_geo/observe_cache/observe_footprint compose the
         # primitive inc/set under one holder.
         self._lock = threading.RLock()

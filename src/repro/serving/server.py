@@ -158,10 +158,10 @@ class _Ticket:
         self.county = np.full(n, -1, np.int32)
         self.block = np.full(n, -1, np.int32)
         self.region = np.full(n, -1, np.int32)
-        self._remaining = n
+        self._remaining = n            # guarded-by: _lock
         self._t0 = t0
         self._lock = threading.Lock()
-        self.latency_s = 0.0 if n == 0 else None
+        self.latency_s = 0.0 if n == 0 else None  # guarded-by: _lock
         self.trace = trace
         self.enqueue_ts = t0
         self.attempt = 0
@@ -220,7 +220,7 @@ class _Region:
     county_parent: np.ndarray
     cache: Optional[HotCellCache]
     analytics: Optional[WindowedAggregator] = None  # ServeConfig.analytics
-    stats: Optional[GeoStats] = None      # merged across micro-batches
+    stats: Optional[GeoStats] = None      # guarded-by: lock
     # Guards the stats merge — replica workers can finish two of this
     # region's batches at once (GeoStats.merge is a sum, so merge order
     # never matters, only merge atomicity).

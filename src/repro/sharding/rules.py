@@ -16,7 +16,6 @@ import math
 from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro import compat

@@ -12,16 +12,45 @@ Also provides two markers the concurrency battery relies on:
   whose fixtures/teardown tolerate the test thread being abandoned —
   the serving tests do (daemon threads, in-process state only).
 
+``REPRO_LOCKCHECK=1`` turns on the runtime lock-order detector
+(repro.analysis.lockcheck, DESIGN.md §17): the serving/analytics locks
+are wrapped once per session, and after every test the hook asserts
+(a) no write to a ``# guarded-by:`` field was observed without its lock
+held and (b) the accumulated acquisition-order graph is acyclic.
+
 NOTE: device count must stay 1 here (the multi-pod dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 in its own process).
 Sharding tests spawn subprocesses with their own XLA_FLAGS.
 """
+import os
 import threading
 
 import numpy as np
 import pytest
 
 from repro.core.synth import build_synth_census
+
+LOCKCHECK = os.environ.get("REPRO_LOCKCHECK") == "1"
+
+if LOCKCHECK:
+    from repro.analysis import lockcheck
+
+    @pytest.fixture(autouse=True)
+    def _lockcheck_guard():
+        """Per-test lockcheck verdict: violations recorded during this
+        test (plus any cycle in the session-wide acquisition graph)
+        fail it.  Install is idempotent — first test pays it."""
+        lockcheck.install()
+        seen = len(lockcheck.registry.violations)
+        yield
+        fresh = lockcheck.registry.violations[seen:]
+        cycle = lockcheck.registry.find_cycle()
+        if fresh or cycle:
+            lines = list(fresh)
+            if cycle:
+                lines.append(
+                    f"lock acquisition-order cycle: {' -> '.join(cycle)}")
+            pytest.fail("lockcheck: " + "; ".join(lines), pytrace=False)
 
 
 def pytest_addoption(parser):
